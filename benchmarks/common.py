@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: CSV emission + artifact paths."""
+from __future__ import annotations
+
+import csv
+import io
+import time
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+ART.mkdir(parents=True, exist_ok=True)
+
+
+def emit(name: str, rows, header):
+    """Print a ``name,us_per_call,derived`` style CSV block + save it."""
+    buf = io.StringIO()
+    w = csv.writer(buf)
+    w.writerow(header)
+    for r in rows:
+        w.writerow(r)
+    text = buf.getvalue()
+    print(f"\n=== {name} ===")
+    print(text)
+    (ART / f"{name}.csv").write_text(text)
+    return text
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0

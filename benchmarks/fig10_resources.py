@@ -1,0 +1,67 @@
+"""Fig 10 reproduction: memory-die count (a) and CPO edge ratio (b).
+
+(a) sweep m (HBM stacks per logic die): throughput rises until m ~ 14
+    for MCMs (insight 5 — NoP-class interconnect needs more memory bw
+    than GPUs' NVLink did), cost rises linearly.
+(b) sweep r (CPO edge fraction): throughput saturates past r ~ 0.6 while
+    OCS cost keeps climbing (insight 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.core import inner_search, mcm_from_compute
+from repro.core.mcm import MCMArch
+from repro.core.workload import paper_workload
+
+C = 8e6
+
+
+def run(budget: int = 32):
+    w = paper_workload(global_batch=512)
+    t = lambda p: p.throughput if p else 0.0
+
+    rows_a = []
+    thpt_by_m = {}
+    base = mcm_from_compute(C, dies_per_mcm=16, m=6)
+    for m in (2, 4, 6, 8, 10, 12, 14, 16):
+        mcm = dataclasses.replace(base, m=m)
+        if not mcm.feasible():
+            rows_a.append([m, "infeasible", "-"])
+            continue
+        best, _ = inner_search(w, mcm, fabric="oi", budget=budget)
+        thpt_by_m[m] = t(best)
+        rows_a.append([m, f"{thpt_by_m[m]:.3e}",
+                       f"{(best.cost if best else 0) / 1e6:.1f}"])
+    emit("fig10a_memory_dies", rows_a, ["m", "tok_s", "cost_M$"])
+    ms = sorted(thpt_by_m)
+    m_opt = max(thpt_by_m, key=thpt_by_m.get)
+    print(f"insight 5: throughput-optimal m = {m_opt} (paper: ~14); "
+          f"gain m=2 -> m_opt: "
+          f"{thpt_by_m[m_opt] / max(thpt_by_m[ms[0]], 1):.2f}x")
+
+    rows_b = []
+    thpt_by_r, cost_by_r = {}, {}
+    for r in (0.2, 0.4, 0.6, 0.8, 1.0):
+        mcm = dataclasses.replace(base, cpo_ratio=r)
+        if not mcm.feasible():
+            rows_b.append([r, "infeasible", "-"])
+            continue
+        best, _ = inner_search(w, mcm, fabric="oi", budget=budget)
+        thpt_by_r[r] = t(best)
+        cost_by_r[r] = best.cost if best else 0
+        rows_b.append([r, mcm.total_links, f"{thpt_by_r[r]:.3e}",
+                       f"{cost_by_r[r] / 1e6:.1f}"])
+    emit("fig10b_cpo_ratio", rows_b, ["r", "links", "tok_s", "cost_M$"])
+    if 0.6 in thpt_by_r and 1.0 in thpt_by_r:
+        extra_perf = thpt_by_r[1.0] / max(thpt_by_r[0.6], 1) - 1
+        extra_cost = cost_by_r[1.0] / max(cost_by_r[0.6], 1) - 1
+        print(f"insight 6: r 0.6 -> 1.0 adds {extra_perf * 100:.0f}% perf "
+              f"for {extra_cost * 100:.0f}% cost (paper: disproportionate "
+              f"beyond r ~ 0.6)")
+    return {"m_opt": m_opt, "thpt_by_r": thpt_by_r}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Fig 4 reproduction: spatial traffic distribution heatmap.
+
+Emits the device x device matrix stats (sparsity, max/mean imbalance) and
+an ASCII mini-heatmap; Observation 3: traffic is sparse + uneven.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import Strategy, Workload, traffic_matrix
+from repro.configs import get_config
+
+
+def run():
+    cfg = get_config("qwen3_moe_235b_a22b")
+    w = Workload(model=cfg, seq_len=10240, global_batch=512)
+    s = Strategy(tp=4, dp=4, pp=2, cp=2, ep=4, n_micro=8)  # 256 devices
+    mat = traffic_matrix(w, s)
+    n = mat.shape[0]
+    nz = mat > 0
+    sparsity = nz.mean()
+    vals = mat[nz]
+    imbalance = vals.max() / max(vals.mean(), 1e-9)
+    rows = [[n, f"{sparsity:.4f}", f"{vals.max() / 1e9:.2f}",
+             f"{vals.mean() / 1e9:.2f}", f"{imbalance:.1f}"]]
+    emit("fig4_heatmap", rows,
+         ["devices", "nonzero_frac", "max_link_GB", "mean_link_GB",
+          "max_over_mean"])
+    # coarse ascii heatmap (16x16 blocks)
+    blk = n // 16
+    coarse = mat[:16 * blk, :16 * blk].reshape(16, blk, 16, blk).sum((1, 3))
+    scale = coarse.max()
+    chars = " .:-=+*#%@"
+    print("coarse traffic heatmap (16x16 device blocks):")
+    for r in coarse:
+        print("".join(chars[int(9 * v / scale)] for v in r))
+    ok = sparsity < 0.1 and imbalance > 2
+    print(f"Observation 3 (sparse + uneven): "
+          f"{'CONFIRMED' if ok else 'VIOLATED'}")
+    return {"sparsity": float(sparsity), "imbalance": float(imbalance),
+            "obs3": ok}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,127 @@
+"""Fig 8 reproduction: training-throughput scaling across cluster types.
+
+GPU(NVLink+IB) vs Chiplet+IB vs RailX(+reuse) vs ChipLight, sweeping the
+total compute C.  Headline paper claims validated at the end:
+  * the GPU scaling point (growth-rate knee, paper: ~4e6 TFLOPS),
+  * ChipLight / GPU gain at the largest C (paper: 19.58x at its endpoint),
+  * ChipLight / RailX at C=16e6 (paper: +41%),
+  * no-reuse throughput drop (paper: -30%), measured on the
+    CP+EP-active strategy where reuse binds (the paper's configuration).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.core import (DEFAULT_HW, Strategy, evaluate_point, inner_search,
+                        mcm_from_compute)
+from repro.core.optimizer import chiplight_optimize, railx_search
+from repro.core.workload import paper_workload
+
+CS = [1e6, 2e6, 4e6, 8e6, 16e6, 32e6, 64e6]
+
+
+def run(budget: int = 48, outer_iters: int = 6):
+    w = paper_workload(global_batch=512)
+    rows = []
+    results = {}
+    t = lambda p: p.throughput if p else 0.0
+    for c in CS:
+        gpu = mcm_from_compute(c, dies_per_mcm=8, m=6)
+        bg, _ = inner_search(w, gpu, fabric="nvlink", budget=budget)
+        chip = mcm_from_compute(c, dies_per_mcm=16, m=6)
+        bi, _ = inner_search(w, chip, fabric="ib", budget=budget)
+        dse = chiplight_optimize(w, c, dies_per_mcm=16, m0=6,
+                                 outer_iters=outer_iters,
+                                 inner_budget=budget)
+        bc = dse.best
+        mcm_opt = bc.mcm if bc else chip
+        br, _ = railx_search(w, mcm_opt, reuse=True, budget=budget)
+        bn, _ = inner_search(w, mcm_opt, fabric="oi", reuse=False,
+                             budget=budget)
+        results[c] = dict(gpu=bg, ib=bi, cl=bc, railx=br, noreuse=bn)
+        rows.append([f"{c:.0e}", f"{t(bg):.3e}", f"{t(bi):.3e}",
+                     f"{t(br):.3e}", f"{t(bc):.3e}", f"{t(bn):.3e}",
+                     bc.strategy.asdict() if bc else "-",
+                     (bc.mcm.m, round(bc.mcm.cpo_ratio, 2)) if bc else "-"])
+    emit("fig8_scaling", rows,
+         ["C_tflops", "gpu_tok_s", "chiplet_ib_tok_s", "railx_tok_s",
+          "chiplight_tok_s", "cl_noreuse_tok_s", "cl_strategy", "cl_mcm"])
+
+    # ---- headline claims ----
+    # scaling point: first C where gpu efficiency < 70% of small-scale
+    eff0 = t(results[CS[0]]["gpu"]) / CS[0]
+    knee = next((c for c in CS
+                 if t(results[c]["gpu"]) / c < 0.7 * eff0), None)
+    big = results[CS[-1]]
+    gain_gpu = t(big["cl"]) / max(t(big["gpu"]), 1)
+    r16 = results[16e6]
+    gain_railx16 = t(r16["cl"]) / max(t(r16["railx"]), 1)
+
+    # reuse ablation on the paper-style CP+EP-active strategy at 16e6,
+    # under the paper's switching assumption ('paper' mode) AND our
+    # physical bank-swap model ('banked' — quantifies the assumption).
+    mcm = r16["cl"].mcm if r16["cl"] else mcm_from_compute(
+        16e6, dies_per_mcm=16, m=6)
+    hw_paper = dataclasses.replace(mcm.hw, ocs_reuse_mode="paper")
+    cand = list(_ep_cp_strategies(w, mcm))
+    reuse_drop = banked_drop = None
+    for s in cand:
+        pr = evaluate_point(w, s, mcm, fabric="oi", reuse=True,
+                            hw=hw_paper)
+        pn = evaluate_point(w, s, mcm, fabric="oi", reuse=False,
+                            hw=hw_paper)
+        if pr and pn and pr.sim.logs.get("reuse_active"):
+            drop = 1 - pn.throughput / pr.throughput
+            if reuse_drop is None or drop > reuse_drop:
+                reuse_drop = drop
+        pb = evaluate_point(w, s, mcm, fabric="oi", reuse=True)
+        if pb and pb.sim.logs.get("reuse_active"):
+            pnb = evaluate_point(w, s, mcm, fabric="oi", reuse=False)
+            if pnb:
+                d = 1 - pnb.throughput / pb.throughput
+                if banked_drop is None or d > banked_drop:
+                    banked_drop = d
+
+    summary = {
+        "gpu_scaling_point_C": knee,
+        "chiplight_over_gpu_endpoint": gain_gpu,
+        "chiplight_over_railx_16e6": gain_railx16,
+        "reuse_drop_paper_mode": reuse_drop,
+        "reuse_drop_banked_mode": banked_drop,
+    }
+    print("\n--- paper-claim validation ---")
+    print(f"GPU scaling point:      C ~ {knee:.0e} (paper: 4e6)")
+    print(f"ChipLight/GPU endpoint: {gain_gpu:.2f}x (paper: 19.58x)")
+    print(f"ChipLight/RailX @16e6:  {gain_railx16:.2f}x (paper: 1.41x)")
+    print(f"reuse-off drop (paper switching assumption): "
+          f"{(reuse_drop or 0) * 100:.0f}% (paper: 30%)")
+    print(f"reuse-off drop (banked 10ms-MEMS model):     "
+          f"{(banked_drop or 0) * 100:.0f}% — reuse infeasible with "
+          f"deployed MEMS at this scale unless switching <~100us")
+    return summary
+
+
+def _ep_cp_strategies(w, mcm):
+    """CP+EP-active strategies matching the paper's reuse experiment."""
+    n = mcm.n_devices
+    out = []
+    for tp in (8, 16):
+        for ep in (8, 16, 32):
+            for cp in (4, 8, 16, 32):
+                for pp in (1, 2, 4, 8):
+                    dp = n // (tp * ep * cp * pp)
+                    if dp < 1 or tp * ep * cp * pp * dp != n:
+                        continue
+                    if w.global_batch % dp:
+                        continue
+                    nm = min(4 * pp, max(w.global_batch // dp, 1))
+                    if pp > 1 and nm < pp:
+                        continue
+                    out.append(Strategy(tp=tp, dp=dp, pp=pp, cp=cp, ep=ep,
+                                        n_micro=nm if pp > 1 else 1))
+    return out[:64]
+
+
+if __name__ == "__main__":
+    run()

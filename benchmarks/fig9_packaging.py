@@ -1,0 +1,79 @@
+"""Fig 9 reproduction: optimal MCM scale (a) and single-die scale (b).
+
+(a) sweep dies-per-MCM 4..64 at fixed C=8e6: small MCMs match large ones
+    on throughput (OI narrows the HBD gap) while large MCMs cut cost
+    (insight 3).
+(b) sweep single-die scale 1, 1/2, 1/4 at fixed C and MCM compute:
+    quarter dies lose little performance and cut cost ~23% (insight 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.core import inner_search, mcm_from_compute, cluster_cost
+from repro.core.hardware import DEFAULT_HW, scaled_die
+from repro.core.workload import paper_workload
+
+C = 8e6
+
+
+def run(budget: int = 40):
+    w = paper_workload(global_batch=512)
+    t = lambda p: p.throughput if p else 0.0
+
+    # ---- (a) MCM scale ----
+    rows_a = []
+    perf, cost = {}, {}
+    for dies in (4, 8, 16, 32, 64):
+        mcm = mcm_from_compute(C, dies_per_mcm=dies, m=6)
+        best, _ = inner_search(w, mcm, fabric="oi", budget=budget)
+        perf[dies] = t(best)
+        cost[dies] = best.cost if best else float("inf")
+        rows_a.append([dies, f"{perf[dies]:.3e}",
+                       f"{cost[dies] / 1e6:.1f}",
+                       best.strategy.asdict() if best else "-"])
+    emit("fig9a_mcm_scale", rows_a,
+         ["dies_per_mcm", "tok_s", "cost_M$", "strategy"])
+    small_vs_large = perf[4] / max(perf[64], 1)
+    cost_ratio = cost[64] / max(cost[4], 1)
+    print(f"insight 3: perf(4-die)/perf(64-die) = {small_vs_large:.2f} "
+          f"(paper: ~1.0); cost(64)/cost(4) = {cost_ratio:.2f} (<1 means "
+          f"large integration is cheaper)")
+
+    # ---- (b) single-die scale ----
+    rows_b = []
+    perf_b, cost_b, sil_b = {}, {}, {}
+    for scale, dies in ((1.0, 16), (0.5, 32), (0.25, 64)):
+        hw = scaled_die(DEFAULT_HW, scale)
+        mcm = mcm_from_compute(C, dies_per_mcm=dies, m=max(
+            2, int(6 * scale)), hw=hw)
+        best, _ = inner_search(w, mcm, fabric="oi", budget=budget, hw=hw)
+        perf_b[scale] = t(best)
+        cost_b[scale] = best.cost if best else float("inf")
+        cb = cluster_cost(best.mcm, best.topo, fabric="oi", hw=hw) \
+            if best else None
+        # silicon-side cost (die yield + HBM + packaging) — the economics
+        # insight 4 is about; optics cost is topology-volatile and
+        # reported separately
+        sil_b[scale] = (cb.silicon + cb.hbm + cb.packaging) if cb else 0
+        rows_b.append([scale, dies, f"{perf_b[scale]:.3e}",
+                       f"{cost_b[scale] / 1e6:.1f}",
+                       f"{sil_b[scale] / 1e6:.1f}"])
+    emit("fig9b_die_scale", rows_b,
+         ["die_scale", "dies_per_mcm", "tok_s", "cost_M$",
+          "silicon_side_M$"])
+    perf_drop = 1 - perf_b[0.25] / max(perf_b[1.0], 1)
+    cost_cut = 1 - cost_b[0.25] / max(cost_b[1.0], 1)
+    sil_cut = 1 - sil_b[0.25] / max(sil_b[1.0], 1)
+    print(f"insight 4: quarter-die perf drop {perf_drop * 100:.0f}% "
+          f"(paper: small); silicon-side cost cut {sil_cut * 100:.0f}% "
+          f"(paper: ~23% total); total incl. optics "
+          f"{cost_cut * 100:.0f}%")
+    return {"i3_perf_ratio": small_vs_large, "i3_cost_ratio": cost_ratio,
+            "i4_perf_drop": perf_drop, "i4_cost_cut": cost_cut,
+            "i4_silicon_cut": sil_cut}
+
+
+if __name__ == "__main__":
+    run()

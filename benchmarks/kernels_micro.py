@@ -1,0 +1,58 @@
+"""Kernel microbenchmarks: interpret-mode correctness timing + the
+xla-blockwise path wall-time per call on CPU (not TPU numbers — the
+kernels' TPU performance is assessed structurally via the roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for s, blk in ((512, 128), (1024, 256)):
+        q = jax.random.normal(key, (1, 8, s, 64), jnp.float32)
+        k = jax.random.normal(key, (1, 2, s, 64), jnp.float32)
+        v = jax.random.normal(key, (1, 2, s, 64), jnp.float32)
+        f_scan = jax.jit(lambda q, k, v: ops.flash_attention(
+            q, k, v, block=blk, backend="xla"))
+        f_blk = jax.jit(lambda q, k, v: ops.flash_attention(
+            q, k, v, block=blk, backend="xla_blocked"))
+        us1 = _time(f_scan, q, k, v)
+        us2 = _time(f_blk, q, k, v)
+        rows.append([f"flash_attn_s{s}", f"{us1:.0f}",
+                     f"blocked={us2:.0f}us speedup={us1 / us2:.2f}x"])
+
+    bb, s, h, p, g, n = 1, 512, 8, 64, 1, 64
+    x = jax.random.normal(key, (bb, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(key, (bb, s, h)))
+    a = -jnp.exp(jax.random.normal(key, (h,)) * 0.5)
+    bm = jax.random.normal(key, (bb, s, g, n)) * 0.3
+    cm = jax.random.normal(key, (bb, s, g, n)) * 0.3
+    f_ssd = jax.jit(lambda *t: ops.ssd(*t, chunk=128, backend="xla"))
+    rows.append(["ssd_s512", f"{_time(f_ssd, x, dt, a, bm, cm):.0f}", ""])
+
+    xx = jax.random.normal(key, (4096, 1024))
+    w = jnp.ones((1024,))
+    f_rn = jax.jit(lambda x_: ops.rmsnorm(x_, w))
+    rows.append(["rmsnorm_4096x1024", f"{_time(f_rn, xx):.0f}", ""])
+    emit("kernels_micro", rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

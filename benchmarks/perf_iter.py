@@ -1,0 +1,118 @@
+"""§Perf hillclimbing harness: hypothesis -> change -> re-lower -> measure.
+
+Each iteration applies ExecConfig overrides to one (arch x shape) cell,
+recompiles the depth variants (flop/byte/wire terms) + the full model
+(memory), and appends a record to artifacts/perf/<cell>.jsonl.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter \
+        --arch qwen3-moe-235b-a22b --shape train_4k \
+        --variant moe_cap_shard --hypothesis "..."
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+import time      # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import repro.launch.dryrun as dr  # noqa: E402
+from repro.configs import canonical_arch  # noqa: E402
+from repro.launch import hlo as hlo_mod  # noqa: E402
+from repro.core.hardware import (TPU_V5E_FLOPS, TPU_V5E_HBM_BW,  # noqa
+                                 TPU_V5E_ICI_BW)
+
+PERF_ART = Path(__file__).resolve().parents[1] / "artifacts" / "perf"
+
+# named variants: ExecConfig overrides
+VARIANTS = {
+    "baseline": {},
+    # hillclimb moves
+    "moe_cap_shard": {"moe_cap_axes": ("data",)},
+    "moe_cap_shard_multi": {"moe_cap_axes": ("pod", "data")},
+    "remat_dots": {"remat": "dots"},
+    "no_remat": {"remat": "none"},
+    "no_seq_parallel": {"seq_axis": None},
+    "attn_block_512": {"attn_block": 512},
+    "attn_block_2048": {"attn_block": 2048},
+    "ssd_chunk_512": {"ssd_chunk": 512},
+    "ssd_chunk_1024": {"ssd_chunk": 1024},
+    "moe_a2a": {"moe_impl": "a2a"},
+    "fp32_params": {},   # placeholder (param dtype handled separately)
+}
+
+
+def measure(arch: str, shape: str, mesh: str, overrides: dict):
+    multi = mesh == "multi"
+    dr.EXEC_OVERRIDES.clear()
+    dr.EXEC_OVERRIDES.update(overrides)
+    t0 = time.time()
+    # depth variants -> extrapolated terms
+    cfg = dr.get_config(arch)
+    cfg1, cfg2, l1, l2, l_full = dr._depth_variants(cfg)
+    pts = []
+    for cvar in (cfg1, cfg2):
+        lw, _, _, _ = dr.lower_cell(arch, shape, multi, cfg_override=cvar,
+                                    layer_unroll=True)
+        cc = lw.compile()
+        cst = cc.cost_analysis() or {}
+        cl = hlo_mod.parse_collectives(cc.as_text())
+        pts.append((float(cst.get("flops", 0.0)),
+                    float(cst.get("bytes accessed", 0.0)),
+                    cl.total_wire))
+
+    def extrap(i):
+        t1, t2 = pts[0][i], pts[1][i]
+        return t1 + (l_full - l1) * (t2 - t1) / max(l2 - l1, 1)
+
+    # full compile -> memory
+    lw, _, _, shp = dr.lower_cell(arch, shape, multi)
+    cc = lw.compile()
+    mem = cc.memory_analysis()
+    dr.EXEC_OVERRIDES.clear()
+
+    flops, bts, wire = extrap(0), extrap(1), extrap(2)
+    n_chips = 512 if multi else 256
+    tokens = (shp.global_batch * shp.seq_len if shp.kind != "decode"
+              else shp.global_batch)
+    mult = 6.0 if shp.kind == "train" else 2.0
+    model_flops = mult * cfg.active_param_count() * tokens
+    terms = {"compute_s": flops / TPU_V5E_FLOPS,
+             "memory_s": bts / TPU_V5E_HBM_BW,
+             "collective_s": wire / TPU_V5E_ICI_BW}
+    dom = max(terms, key=terms.get)
+    frac = (model_flops / n_chips / TPU_V5E_FLOPS) / max(terms.values())
+    return {
+        "flops_per_dev": flops, "bytes_per_dev": bts, "wire_per_dev": wire,
+        **terms, "dominant": dom, "roofline_frac": frac,
+        "model_over_hlo": model_flops / n_chips / max(flops, 1.0),
+        "temp_gb": float(mem.temp_size_in_bytes) / 1e9,
+        "arg_gb": float(mem.argument_size_in_bytes) / 1e9,
+        "wall_s": time.time() - t0,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default="baseline",
+                    choices=sorted(VARIANTS))
+    ap.add_argument("--hypothesis", default="")
+    args = ap.parse_args()
+
+    arch = canonical_arch(args.arch)
+    rec = measure(arch, args.shape, args.mesh, VARIANTS[args.variant])
+    rec.update(variant=args.variant, hypothesis=args.hypothesis,
+               arch=arch, shape=args.shape, mesh=args.mesh)
+    PERF_ART.mkdir(parents=True, exist_ok=True)
+    out = PERF_ART / f"{arch}__{args.shape}__{args.mesh}.jsonl"
+    with out.open("a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

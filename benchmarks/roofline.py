@@ -1,0 +1,74 @@
+"""Roofline analysis from the dry-run artifacts (assignment §Roofline).
+
+Per (arch x shape x mesh): three terms in seconds —
+  compute    = HLO_FLOPs / peak_FLOP/s        (per chip)
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_wire_bytes / link_bw
+plus the dominant term, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and a
+bottleneck note.  TPU v5e: 197 TF bf16, 819 GB/s HBM, 50 GB/s/link.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.core.hardware import (TPU_V5E_FLOPS, TPU_V5E_HBM_BW,
+                                 TPU_V5E_ICI_BW)
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def _advice(dom, rec):
+    if dom == "compute":
+        return "raise MODEL/HLO ratio (less remat/masked-waste)"
+    if dom == "memory":
+        return "fuse/bf16 intermediates; shard or shrink caches"
+    return "rebalance sharding to cut collective bytes"
+
+
+def analyze(mesh="single"):
+    rows, recs = [], []
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("skipped"):
+            rows.append([rec["arch"], rec["shape"], "SKIP",
+                         rec.get("reason", ""), "", "", "", "", ""])
+            continue
+        comp = rec["hlo_flops_per_device"] / TPU_V5E_FLOPS
+        mem = rec["hlo_bytes_per_device"] / TPU_V5E_HBM_BW
+        coll = rec["coll_wire_bytes_per_device"] / TPU_V5E_ICI_BW
+        terms = {"compute": comp, "memory": mem, "collective": coll}
+        dom = max(terms, key=terms.get)
+        model_per_dev = rec["model_flops_step"] / rec["n_chips"]
+        useful = model_per_dev / max(rec["hlo_flops_per_device"], 1.0)
+        # roofline fraction: model-useful compute time over the
+        # achievable step floor (max of the three terms)
+        frac = (model_per_dev / TPU_V5E_FLOPS) / max(terms.values())
+        recs.append(dict(rec, terms=terms, dom=dom, useful=useful,
+                         frac=frac))
+        rows.append([rec["arch"], rec["shape"], f"{comp:.4f}",
+                     f"{mem:.4f}", f"{coll:.4f}", dom,
+                     f"{useful:.2f}", f"{frac:.2f}", _advice(dom, rec)])
+    emit(f"roofline_{mesh}", rows,
+         ["arch", "shape", "compute_s", "memory_s", "collective_s",
+          "dominant", "model/hlo", "roofline_frac", "next_move"])
+    return recs
+
+
+def run():
+    recs = analyze("single")
+    analyze("multi")
+    live = [r for r in recs if "terms" in r]
+    if live:
+        worst = min(live, key=lambda r: r["frac"])
+        collb = max(live, key=lambda r: r["terms"]["collective"]
+                    / max(sum(r["terms"].values()), 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']}"
+              f" ({worst['frac']:.2f})")
+        print(f"most collective-bound:   {collb['arch']}/{collb['shape']}")
+    return recs
+
+
+if __name__ == "__main__":
+    run()

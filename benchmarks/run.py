@@ -1,0 +1,64 @@
+"""Benchmark harness — one entry per paper table/figure + the roofline.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick]``
+Prints ``name,us_per_call,derived``-style CSV blocks per benchmark and a
+paper-claim validation summary.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller search budgets")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    budget = 24 if args.quick else 48
+
+    from benchmarks import (fig3_traffic, fig4_heatmap, fig8_scaling,
+                            fig9_packaging, fig10_resources, kernels_micro,
+                            roofline)
+
+    jobs = {
+        "fig3": lambda: fig3_traffic.run(),
+        "fig4": lambda: fig4_heatmap.run(),
+        "fig8": lambda: fig8_scaling.run(budget=budget,
+                                         outer_iters=4 if args.quick else 6),
+        "fig9": lambda: fig9_packaging.run(budget=max(budget // 2, 16)),
+        "fig10": lambda: fig10_resources.run(budget=max(budget // 2, 16)),
+        "kernels": lambda: kernels_micro.run(),
+        "roofline": lambda: roofline.run(),
+    }
+    if args.only:
+        jobs = {k: v for k, v in jobs.items() if k in args.only.split(",")}
+
+    summary = {}
+    for name, job in jobs.items():
+        t0 = time.time()
+        try:
+            out = job()
+            summary[name] = {"ok": True, "wall_s": time.time() - t0}
+            if isinstance(out, dict):
+                summary[name]["metrics"] = {
+                    k: v for k, v in out.items()
+                    if isinstance(v, (int, float, str, bool, type(None)))}
+        except Exception as e:  # noqa: BLE001
+            summary[name] = {"ok": False, "error": repr(e)}
+            print(f"[bench {name} FAILED] {e!r}")
+    out_path = Path(__file__).resolve().parents[1] / "artifacts" / \
+        "bench" / "summary.json"
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(summary, indent=1, default=str))
+    print("\n=== benchmark summary ===")
+    for k, v in summary.items():
+        print(f"{k}: {'OK' if v.get('ok') else 'FAIL'} "
+              f"{v.get('metrics', v.get('error', ''))}")
+
+
+if __name__ == '__main__':
+    main()

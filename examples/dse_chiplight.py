@@ -1,0 +1,56 @@
+"""Full cross-layer DSE study: Pareto frontier + cluster comparison.
+
+Reproduces the paper's workflow end-to-end: profile traffic -> co-optimise
+MCM/parallelism/topology -> compare against GPU, Chiplet+IB and RailX at
+one compute point, then emit the performance-cost Pareto frontier.
+
+    PYTHONPATH=src python examples/dse_chiplight.py --C 4e6
+"""
+import argparse
+
+from repro.core import (chiplight_optimize, inner_search,
+                        mcm_from_compute, traffic_volumes)
+from repro.core.optimizer import railx_search
+from repro.core.workload import paper_workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--C", type=float, default=4e6,
+                    help="total cluster compute, TFLOPS")
+    ap.add_argument("--budget", type=int, default=40)
+    args = ap.parse_args()
+
+    w = paper_workload(global_batch=512)
+    t = lambda p: p.throughput if p else 0.0
+
+    print(f"=== traffic projection (network-independent) ===")
+    res = chiplight_optimize(w, args.C, dies_per_mcm=16, m0=6,
+                             outer_iters=5, inner_budget=args.budget)
+    best = res.best
+    vols = traffic_volumes(w, best.strategy)
+    for p, v in sorted(vols.items(), key=lambda kv: -kv[1]):
+        print(f"  {p}: {v / 1e9:8.1f} GB/device/step")
+
+    print(f"\n=== cluster comparison at C={args.C:.0e} TFLOPS ===")
+    gpu = mcm_from_compute(args.C, dies_per_mcm=8, m=6)
+    bg, _ = inner_search(w, gpu, fabric="nvlink", budget=args.budget)
+    chip = mcm_from_compute(args.C, dies_per_mcm=16, m=6)
+    bi, _ = inner_search(w, chip, fabric="ib", budget=args.budget)
+    br, _ = railx_search(w, best.mcm, reuse=True, budget=args.budget)
+    print(f"  GPU (NVLink+IB):  {t(bg):.3e} tok/s")
+    print(f"  Chiplet+IB:       {t(bi):.3e} tok/s")
+    print(f"  RailX:            {t(br):.3e} tok/s")
+    print(f"  ChipLight:        {t(best):.3e} tok/s  "
+          f"({t(best) / max(t(bg), 1):.2f}x over GPU)")
+
+    print(f"\n=== performance-cost Pareto frontier "
+          f"({len(res.frontier)} points) ===")
+    for p in res.frontier:
+        print(f"  ${p.cost / 1e6:7.1f}M  {p.throughput:.3e} tok/s  "
+              f"m={p.mcm.m} r={p.mcm.cpo_ratio:.1f} "
+              f"{p.strategy.asdict()}")
+
+
+if __name__ == "__main__":
+    main()

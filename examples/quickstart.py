@@ -1,0 +1,45 @@
+"""Quickstart: the ChipLight DSE in ~30 lines.
+
+Optimises a 1e6-TFLOPS chiplet+OI cluster for Qwen3-235B training and
+prints the chosen MCM architecture, parallel strategy, OI topology and
+the JAX deployment plan.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import chiplight_optimize, cluster_cost
+from repro.core.workload import paper_workload
+from repro.parallel.plan import plan_from_design
+
+w = paper_workload(global_batch=512)
+print(f"workload: {w.model.name}, ctx={w.seq_len}, "
+      f"{w.tokens_per_step / 1e6:.1f}M tokens/step, "
+      f"{w.total_params / 1e9:.0f}B params ({w.active_params / 1e9:.0f}B "
+      f"active)")
+
+res = chiplight_optimize(w, total_tflops=1e6, dies_per_mcm=16, m0=6,
+                         outer_iters=4, inner_budget=32)
+best = res.best
+print(f"\nbest design point ({len(res.history)} evaluated, "
+      f"{len(res.frontier)} on the Pareto front):")
+print(f"  MCM: {best.mcm.n_mcm} packages of {best.mcm.x}x{best.mcm.y} "
+      f"dies, m={best.mcm.m} HBM/die, CPO ratio {best.mcm.cpo_ratio:.1f} "
+      f"-> {best.mcm.total_links} optical links each")
+print(f"  strategy: {best.strategy.asdict()} "
+      f"(n_micro={best.strategy.n_micro})")
+if best.topo and best.topo.dims:
+    print(f"  rails: {[(d.n, d.r, d.k) for d in best.topo.dims]} "
+          f"mapping {best.topo.mapping} reuse={best.topo.reuse_pair}")
+    print(f"  link allocation l_p: {best.topo.link_alloc} "
+          f"({best.topo.ocs_count()} OCS)")
+print(f"  throughput: {best.throughput:.3e} tokens/s  "
+      f"MFU {best.sim.mfu:.2f}  bottleneck: {best.sim.bottleneck}")
+print(f"  cluster cost: ${best.cost / 1e6:.1f}M")
+
+plan = plan_from_design(best)
+print(f"\nJAX deployment plan: mesh {plan.mesh_shape()} "
+      f"(TP->model, DP*CP*EP->data), pp={plan.pp}, n_micro={plan.n_micro}")
+
+print("\nouter-search trace (heuristic planner moves):")
+for t in res.outer_trace:
+    print(f"  iter {t['iter']}: mcm(n,x,y,m,r)={t['mcm']} "
+          f"thpt={t['best_thpt']:.2e} bottleneck={t['bottleneck']}")

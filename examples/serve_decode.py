@@ -1,0 +1,11 @@
+"""Batched serving example: prefill + decode with a reduced config.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch gemma2-2b
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    import sys
+    if "--reduced" not in sys.argv:
+        sys.argv.append("--reduced")
+    main()

@@ -1,0 +1,15 @@
+# ChipLight core: the paper's contribution as a composable library.
+# Traffic model (paper §III), MCM + OI-rail cluster model (§IV-A),
+# cross-layer nested optimiser with dynamic link reuse (§IV-B).
+from repro.core.hardware import HW, DEFAULT_HW  # noqa: F401
+from repro.core.workload import Workload, paper_workload  # noqa: F401
+from repro.core.traffic import Strategy, traffic_volumes, \
+    traffic_matrix, reusable_pairs  # noqa: F401
+from repro.core.mcm import MCMArch, mcm_from_compute  # noqa: F401
+from repro.core.network import RailDim, OITopology, allocate_links, \
+    derive_physical  # noqa: F401
+from repro.core.cost import cluster_cost, CostBreakdown  # noqa: F401
+from repro.core.simulator import simulate, SimResult, map_intra  # noqa: F401
+from repro.core.optimizer import (  # noqa: F401
+    chiplight_optimize, inner_search, railx_search, evaluate_point,
+    enumerate_strategies, pareto_front, DesignPoint, DSEResult)

@@ -1,0 +1,403 @@
+"""ChipLight cross-layer optimisation (paper §IV-B, Fig 6).
+
+Nested flow:
+  * inner search — PARALLEL-CENTRIC para-topo co-exploration: sample
+    parallelism degrees (enumeration when small, PRF surrogate when large),
+    project traffic (network-independent), map TP (+ maybe one more group)
+    intra-MCM, allocate links traffic-proportionally (Eq. l_p), apply
+    dynamic link reuse (Eq. 1), derive the fewest-OCS physical topology,
+    evaluate with the simulator.
+  * outer search — heuristic planner (§IV-B-3) reads simulator logs
+    (compute util, memory pressure, comm bottleneck) and moves the MCM
+    architecture (N, x, y, m, r) to break the bottleneck or trim waste.
+
+Outputs a performance-cost Pareto frontier over (MCM arch, topology,
+strategy) plus the best point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost import cluster_cost
+from repro.core.hardware import HW, DEFAULT_HW
+from repro.core.mcm import MCMArch, mcm_from_compute
+from repro.core.network import OITopology, RailDim, allocate_links, \
+    derive_physical
+from repro.core.prf import PRF
+from repro.core.simulator import SimResult, map_intra, simulate
+from repro.core.traffic import Strategy, traffic_volumes, reusable_pairs
+from repro.core.workload import Workload
+
+
+# ---------------------------------------------------------------------------
+# Strategy enumeration
+# ---------------------------------------------------------------------------
+def _divisors(n: int) -> List[int]:
+    out = [d for d in range(1, int(math.isqrt(n)) + 1) if n % d == 0]
+    return sorted(set(out + [n // d for d in out]))
+
+
+def enumerate_strategies(w: Workload, mcm: MCMArch,
+                         max_pp: int = 32,
+                         min_layers_per_stage: int = 4) -> List[Strategy]:
+    n = mcm.n_devices
+    dies = mcm.dies_per_mcm
+    moe = w.model.moe
+    out = []
+    tps = [t for t in _divisors(dies) if w.d_model % t == 0]
+    for tp in tps:
+        rest1 = n // tp
+        # pipeline-stage granularity: embedding/head stages + interleaving
+        # overhead make <4 layers per stage impractical
+        pps = [p for p in _divisors(rest1)
+               if p <= min(max_pp, w.n_layers // min_layers_per_stage)
+               or p == 1]
+        for pp in pps:
+            rest2 = rest1 // pp
+            if moe is not None:
+                eps = [e for e in _divisors(rest2)
+                       if moe.n_experts % e == 0]
+            else:
+                eps = [1]
+            for ep in eps:
+                rest3 = rest2 // ep
+                cps = [c for c in _divisors(rest3)
+                       if c <= 64 and w.seq_len % c == 0 and
+                       (c == 1 or w.n_attn_layers > 0)]
+                for cp in cps:
+                    dp = rest3 // cp
+                    if dp > 1 and w.global_batch % dp != 0:
+                        continue
+                    if pp > 1:
+                        n_micro = min(4 * pp,
+                                      max(w.global_batch // max(dp, 1), 1))
+                        if n_micro < pp:
+                            continue
+                    else:
+                        n_micro = 1
+                    s = Strategy(tp=tp, dp=dp, pp=pp, cp=cp, ep=ep,
+                                 n_micro=n_micro)
+                    if map_intra(w, s, mcm) is not None:
+                        out.append(s)
+    return out
+
+
+def _features(s: Strategy) -> List[float]:
+    return [math.log2(max(x, 1)) for x in
+            (s.tp, s.dp, s.pp, s.cp, s.ep, s.n_micro)]
+
+
+# ---------------------------------------------------------------------------
+# Para-topo evaluation (one design point of the inner search)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DesignPoint:
+    strategy: Strategy
+    mcm: MCMArch
+    topo: Optional[OITopology]
+    sim: SimResult
+    cost: float
+
+    @property
+    def throughput(self) -> float:
+        return self.sim.throughput
+
+
+def evaluate_point(w: Workload, s: Strategy, mcm: MCMArch,
+                   fabric: str = "oi", reuse: bool = True,
+                   hw: Optional[HW] = None) -> Optional[DesignPoint]:
+    hw = hw or mcm.hw
+    mapping = map_intra(w, s, mcm)
+    if mapping is None:
+        return None
+    intra, inter = mapping
+    topo = None
+    if fabric == "oi":
+        vols = traffic_volumes(w, s)
+        inter_vols = {p: vols[p] for p, d in inter.items()
+                      if d > 1 and vols[p] > 0}
+        reuse_pair = None
+        if reuse:
+            pairs = [pr for pr in reusable_pairs(w, s)
+                     if pr[0] in inter_vols and pr[1] in inter_vols]
+            reuse_pair = pairs[0] if pairs else None
+        alloc = allocate_links(inter_vols, mcm.total_links, reuse_pair)
+        inter_deg = {p: d for p, d in inter.items() if d > 1}
+        topo = derive_physical(inter_deg, alloc, mcm, mcm.n_mcm, hw,
+                               reuse_pair=reuse_pair)
+        if topo is None and reuse_pair is not None:
+            alloc = allocate_links(inter_vols, mcm.total_links, None)
+            topo = derive_physical(inter_deg, alloc, mcm, mcm.n_mcm, hw,
+                                   reuse_pair=None)
+        if topo is None and inter_deg:
+            return None
+    sim = simulate(w, s, mcm, fabric=fabric, topo=topo, reuse=reuse, hw=hw)
+    if not sim.feasible:
+        return None
+    cost = cluster_cost(mcm, topo, fabric=fabric, hw=hw).total
+    return DesignPoint(strategy=s, mcm=mcm, topo=topo, sim=sim, cost=cost)
+
+
+# ---------------------------------------------------------------------------
+# Inner search
+# ---------------------------------------------------------------------------
+def inner_search(w: Workload, mcm: MCMArch, fabric: str = "oi",
+                 reuse: bool = True, budget: int = 64,
+                 hw: Optional[HW] = None, seed: int = 0
+                 ) -> Tuple[Optional[DesignPoint], List[DesignPoint]]:
+    """Parallel-centric para-topo search; returns (best, evaluated)."""
+    hw = hw or mcm.hw
+    cands = enumerate_strategies(w, mcm)
+    if not cands:
+        return None, []
+    rng = np.random.default_rng(seed)
+    evaluated: List[DesignPoint] = []
+
+    def run(s: Strategy):
+        pt = evaluate_point(w, s, mcm, fabric, reuse, hw)
+        if pt is not None:
+            evaluated.append(pt)
+        return pt
+
+    if len(cands) <= budget:
+        for s in cands:
+            run(s)
+    else:
+        # PRF-surrogate loop (paper: black-box sampling, e.g. PRF [33])
+        init = min(budget // 2, len(cands))
+        order = rng.permutation(len(cands))
+        tried = set()
+        for i in order[:init]:
+            tried.add(int(i))
+            run(cands[int(i)])
+        while len(tried) < min(budget, len(cands)):
+            pts = [(p.strategy, p.throughput) for p in evaluated]
+            if len(pts) >= 4:
+                x = np.array([_features(s) for s, _ in pts])
+                y = np.array([t for _, t in pts])
+                model = PRF(seed=int(rng.integers(1 << 30))).fit(x, y)
+                rest = [i for i in range(len(cands)) if i not in tried]
+                xs = np.array([_features(cands[i]) for i in rest])
+                scores = model.ucb(xs, kappa=1.0)
+                pick = rest[int(np.argmax(scores))]
+            else:
+                rest = [i for i in range(len(cands)) if i not in tried]
+                pick = int(rng.choice(rest))
+            tried.add(pick)
+            run(cands[pick])
+
+    best = max(evaluated, key=lambda p: p.throughput, default=None)
+    return best, evaluated
+
+
+# ---------------------------------------------------------------------------
+# Outer search: heuristic planner over MCM architecture
+# ---------------------------------------------------------------------------
+def propose_mcm(cur: MCMArch, best: Optional[DesignPoint],
+                rng: np.random.Generator) -> MCMArch:
+    """Bottleneck-driven move (paper §IV-B-3).  Keeps C ~ constant by
+    moving dies between packages when scale changes."""
+    hw = cur.hw
+    if best is None:
+        # infeasible inner search — most often memory capacity: raise m
+        return dataclasses.replace(cur, m=min(cur.m + 2, 16))
+    logs = best.sim.logs
+    moves = []
+    if logs.get("mem_pressure", 0) > 0.85 or logs.get("hbm_bw_bound"):
+        moves.append(dataclasses.replace(cur, m=min(cur.m + 2, 16)))
+    if logs.get("nop_bound"):
+        if cur.m > 2:
+            moves.append(dataclasses.replace(cur, m=cur.m - 1))
+        if cur.dies_per_mcm > 4:
+            moves.append(_rescale_dies(cur, cur.dies_per_mcm // 2))
+    if logs.get("oi_bound"):
+        if cur.cpo_ratio < 0.95:
+            moves.append(dataclasses.replace(
+                cur, cpo_ratio=min(cur.cpo_ratio + 0.1, 1.0)))
+        moves.append(_rescale_dies(cur, cur.dies_per_mcm * 2))
+    if not moves and logs.get("compute_util", 0) > 0.75:
+        # healthy: trim over-provisioned resources to cut cost
+        if cur.cpo_ratio > 0.3:
+            moves.append(dataclasses.replace(
+                cur, cpo_ratio=cur.cpo_ratio - 0.1))
+        if cur.m > 4:
+            moves.append(dataclasses.replace(cur, m=cur.m - 1))
+    if not moves:
+        moves.append(dataclasses.replace(
+            cur, m=int(np.clip(cur.m + rng.integers(-2, 3), 1, 16))))
+    pick = moves[int(rng.integers(len(moves)))]
+    return pick if pick.feasible() else cur
+
+
+def _rescale_dies(cur: MCMArch, new_dies: int) -> MCMArch:
+    total = cur.n_devices
+    new_dies = max(1, new_dies)
+    x = int(math.sqrt(new_dies))
+    while new_dies % x:
+        x -= 1
+    return dataclasses.replace(cur, x=x, y=new_dies // x,
+                               n_mcm=max(total // new_dies, 1))
+
+
+# ---------------------------------------------------------------------------
+# Pareto utilities + full nested optimisation
+# ---------------------------------------------------------------------------
+def pareto_front(points: List[DesignPoint]) -> List[DesignPoint]:
+    """Max throughput, min cost."""
+    pts = sorted(points, key=lambda p: (p.cost, -p.throughput))
+    front, best_t = [], -1.0
+    for p in pts:
+        if p.throughput > best_t:
+            front.append(p)
+            best_t = p.throughput
+    return front
+
+
+@dataclass
+class DSEResult:
+    best: Optional[DesignPoint]
+    frontier: List[DesignPoint]
+    history: List[DesignPoint] = field(default_factory=list)
+    outer_trace: List[Dict] = field(default_factory=list)
+
+
+def chiplight_optimize(w: Workload, total_tflops: float,
+                       dies_per_mcm: int = 16, m0: int = 6,
+                       outer_iters: int = 8, inner_budget: int = 48,
+                       fabric: str = "oi", reuse: bool = True,
+                       hw: HW = DEFAULT_HW, seed: int = 0) -> DSEResult:
+    rng = np.random.default_rng(seed)
+    mcm = mcm_from_compute(total_tflops, dies_per_mcm, m0, hw=hw)
+    all_pts: List[DesignPoint] = []
+    trace = []
+    for it in range(outer_iters):
+        best, pts = inner_search(w, mcm, fabric=fabric, reuse=reuse,
+                                 budget=inner_budget, hw=hw,
+                                 seed=seed + it)
+        all_pts.extend(pts)
+        trace.append({
+            "iter": it, "mcm": (mcm.n_mcm, mcm.x, mcm.y, mcm.m,
+                                mcm.cpo_ratio),
+            "best_thpt": best.throughput if best else 0.0,
+            "bottleneck": best.sim.bottleneck if best else "none",
+        })
+        mcm = propose_mcm(mcm, best, rng)
+    best = max(all_pts, key=lambda p: p.throughput, default=None)
+    return DSEResult(best=best, frontier=pareto_front(all_pts),
+                     history=all_pts, outer_trace=trace)
+
+
+# ---------------------------------------------------------------------------
+# RailX baseline (prior network design [20])
+# ---------------------------------------------------------------------------
+def railx_topology(mcm: MCMArch, inter_degrees: Dict[str, int],
+                   inter_vols: Dict[str, float],
+                   reuse_pair=None, hw: HW = DEFAULT_HW
+                   ) -> Optional[OITopology]:
+    """HammingMesh-like: exactly TWO rail dimensions with UNIFORM links.
+
+    Parallelism groups are packed onto the two dims; links are split
+    50/50 regardless of traffic — the contrast with ChipLight's
+    traffic-proportional allocation.
+    """
+    ps = [p for p, d in inter_degrees.items() if d > 1]
+    n = 1
+    for p in ps:
+        n *= inter_degrees[p]
+    if n == 1:
+        return OITopology(dims=(), mapping=(), link_alloc={})
+    l_half = max(mcm.total_links // 2, 1)
+    best = None
+    for mask in range(1, 1 << len(ps)):
+        g1 = [ps[i] for i in range(len(ps)) if mask & (1 << i)]
+        g2 = [p for p in ps if p not in g1]
+        n1 = 1
+        for p in g1:
+            n1 *= inter_degrees[p]
+        n2 = n // n1
+        if n1 < 2 and g1:
+            continue
+        if g2 and n2 < 2:
+            continue
+        dims, mapping = [], []
+        for grp, ni in ((g1, n1), (g2, n2)):
+            if not grp:
+                continue
+            k = max(1, math.ceil(ni / hw.ocs_ports))
+            if k > l_half:
+                continue
+            dims.append(RailDim(n=ni, r=l_half, k=k))
+            mapping.append(tuple(grp))
+        if len(dims) != (2 if g2 else 1):
+            continue
+        # uniform split within a dim, reuse only if the pair landed together
+        alloc = {}
+        rp = None
+        for grp, d in zip(mapping, dims):
+            if (reuse_pair and all(q in grp for q in reuse_pair)):
+                rp = reuse_pair
+                vmax = max(inter_vols.get(q, 0.0) for q in reuse_pair)
+                vols_grp = {p: inter_vols.get(p, 0.0) for p in grp}
+                others = {p: v for p, v in vols_grp.items()
+                          if p not in reuse_pair}
+                denom = sum(others.values()) + vmax
+                l_r = max(int(d.r * vmax / denom), 1) if denom else d.r
+                for p in reuse_pair:
+                    alloc[p] = l_r
+                rest = d.r - l_r
+                so = sum(others.values())
+                for p, v in others.items():
+                    alloc[p] = max(int(rest * v / so), 1) if so else 1
+            else:
+                vols_grp = {p: max(inter_vols.get(p, 0.0), 1.0)
+                            for p in grp}
+                sv = sum(vols_grp.values())
+                for p, v in vols_grp.items():
+                    alloc[p] = max(int(d.r * v / sv), 1)
+        topo = OITopology(dims=tuple(dims), mapping=tuple(mapping),
+                          link_alloc=alloc, reuse_pair=rp)
+        errs = topo.validate(mcm, hw, n_mcm_expected=n)
+        if errs:
+            continue
+        if best is None or topo.ocs_count() < best.ocs_count():
+            best = topo
+    return best
+
+
+def railx_search(w: Workload, mcm: MCMArch, reuse: bool = True,
+                 budget: int = 64, hw: HW = DEFAULT_HW, seed: int = 0
+                 ) -> Tuple[Optional[DesignPoint], List[DesignPoint]]:
+    """Best strategy on the RailX network (fair comparison: same budget)."""
+    evaluated = []
+    for s in enumerate_strategies(w, mcm)[: budget * 4]:
+        mapping = map_intra(w, s, mcm)
+        if mapping is None:
+            continue
+        intra, inter = mapping
+        vols = traffic_volumes(w, s)
+        inter_vols = {p: vols[p] for p, d in inter.items()
+                      if d > 1 and vols[p] > 0}
+        rp = None
+        if reuse:
+            prs = [pr for pr in reusable_pairs(w, s)
+                   if pr[0] in inter_vols and pr[1] in inter_vols]
+            rp = prs[0] if prs else None
+        inter_deg = {p: d for p, d in inter.items() if d > 1}
+        topo = railx_topology(mcm, inter_deg, inter_vols, reuse_pair=rp,
+                              hw=hw)
+        if topo is None and inter_deg:
+            continue
+        sim = simulate(w, s, mcm, fabric="oi", topo=topo, reuse=reuse,
+                       hw=hw)
+        if not sim.feasible:
+            continue
+        cost = cluster_cost(mcm, topo, fabric="oi", hw=hw).total
+        evaluated.append(DesignPoint(s, mcm, topo, sim, cost))
+    best = max(evaluated, key=lambda p: p.throughput, default=None)
+    return best, evaluated

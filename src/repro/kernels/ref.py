@@ -1,0 +1,187 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth for the kernel allclose sweeps and double as the
+CPU execution path of the model zoo (the dry-run compiles the *blockwise*
+variants in ops.py, which are numerically equivalent but memory-efficient).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=0.0,
+                  scale=None):
+    """Dense reference attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D).  GQA via head repetition.
+    ``window``: sliding window size (keys with row-col >= window masked);
+    may be a python int or a traced scalar.  Causal assumes Sq == Sk or
+    q occupies the LAST Sq positions of the Sk key range.
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = jnp.arange(sq)[:, None] + (sk - sq)   # absolute query positions
+    cols = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Grouped matmul (MoE expert FFN)
+# ---------------------------------------------------------------------------
+def moe_gmm_ref(x, w, group_sizes):
+    """x: (T, K) tokens sorted by expert; w: (E, K, N); group_sizes: (E,).
+
+    Returns (T, N).  Rows beyond sum(group_sizes) produce zeros.
+    Python-loop oracle (group_sizes must be concrete).
+    """
+    import numpy as np
+    sizes = np.asarray(group_sizes)
+    out = jnp.zeros((x.shape[0], w.shape[-1]), dtype=x.dtype)
+    start = 0
+    for e, g in enumerate(sizes):
+        g = int(g)
+        if g == 0:
+            continue
+        seg = x[start:start + g].astype(jnp.float32) @ w[e].astype(jnp.float32)
+        out = out.at[start:start + g].set(seg.astype(x.dtype))
+        start += g
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+def ssd_ref(x, dt, A, B, C, D=None, *, initial_state=None):
+    """Naive per-step recurrence oracle for the SSD operator.
+
+    x:  (Bb, S, H, P)     inputs (already gated/conv'd at the model level)
+    dt: (Bb, S, H)        positive step sizes (softplus applied upstream)
+    A:  (H,)              negative decay rates
+    B:  (Bb, S, G, N)     input projections   (G groups, GQA-style)
+    C:  (Bb, S, G, N)     output projections
+    D:  (H,) or None      skip connection
+    Returns y: (Bb, S, H, P) and final state (Bb, H, P, N).
+    """
+    bb, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)  # (Bb,S,H,N)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp          # (Bb,H,P),(Bb,H),(Bb,H,N),(Bb,H,N)
+        decay = jnp.exp(dtt * A[None, :])[..., None, None]      # (Bb,H,1,1)
+        upd = (dtt[..., None, None] * bt[:, :, None, :]
+               * xt[..., :, None])                               # (Bb,H,P,N)
+        state = state * decay + upd
+        yt = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, yt
+
+    state0 = (jnp.zeros((bb, h, p, n), dtype=jnp.float32)
+              if initial_state is None else initial_state)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bh, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Ch, 1, 0).astype(jnp.float32))
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), state
+
+
+def ssd_chunked_ref(x, dt, A, B, C, D=None, *, chunk=64, initial_state=None,
+                    unroll=False):
+    """Chunked (matmul-form) SSD — same math as ssd_ref, O(S*Q) memory.
+
+    This is the algorithm the Pallas kernel implements; kept in jnp as the
+    CPU/dry-run execution path.  ``unroll=True`` runs the chunk loop in
+    python (HLO flop counts then reflect all chunks — used by the AOT
+    roofline; lax.scan otherwise).
+    """
+    bb, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(bb, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(bb, nc, chunk, h).astype(f32)
+    Bc = jnp.repeat(B, rep, axis=2).reshape(bb, nc, chunk, h, n).astype(f32)
+    Cc = jnp.repeat(C, rep, axis=2).reshape(bb, nc, chunk, h, n).astype(f32)
+
+    def chunk_step(state, inp):
+        xq, dtq, bq, cq = inp   # (Bb,Q,H,P),(Bb,Q,H),(Bb,Q,H,N),(Bb,Q,H,N)
+        la = dtq * A[None, None, :]                    # log decay per step
+        cum = jnp.cumsum(la, axis=1)                   # L_i (inclusive)
+        # intra-chunk: M[i,j] = C_i.B_j * dt_j * exp(L_i - L_j) for j <= i
+        cb = jnp.einsum("bqhn,bkhn->bhqk", cq, bq)
+        dec = cum[:, :, None, :] - cum[:, None, :, :]   # (Bb,Q,K,H) L_i-L_j
+        dec = jnp.moveaxis(dec, -1, 1)                  # (Bb,H,Q,K)
+        iq = jnp.arange(xq.shape[1])
+        causal = iq[:, None] >= iq[None, :]
+        # clamp masked entries BEFORE exp: avoids 0*inf = NaN in the VJP
+        dec = jnp.where(causal[None, None], dec, 0.0)
+        m = cb * jnp.where(causal[None, None], jnp.exp(dec), 0.0)
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", m, xq * dtq[..., None])
+        # inter-chunk: y_i += C_i . (exp(L_i) * state)
+        ci_dec = cq * jnp.exp(cum)[..., None]           # (Bb,Q,H,N)
+        y_inter = jnp.einsum("bhpn,bqhn->bqhp", state, ci_dec)
+        # state update: h' = exp(L_Q) h + sum_j exp(L_Q - L_j) dt_j B_j x_j
+        tot = cum[:, -1:, :]                            # (Bb,1,H)
+        w = jnp.exp(tot - cum) * dtq                    # (Bb,Q,H)
+        upd = jnp.einsum("bqhn,bqhp->bhpn", bq * w[..., None], xq)
+        state = state * jnp.exp(tot[:, 0, :])[..., None, None] + upd
+        return state, y_intra + y_inter
+
+    state0 = (jnp.zeros((bb, h, p, n), dtype=f32)
+              if initial_state is None else initial_state)
+    if unroll:
+        state, ys = state0, []
+        for ci in range(nc):
+            state, yc = chunk_step(state, (xc[:, ci], dtc[:, ci],
+                                           Bc[:, ci], Cc[:, ci]))
+            ys.append(yc)
+        y = jnp.stack(ys, 1).reshape(bb, s, h, p)
+    else:
+        xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+              jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+        state, ys = jax.lax.scan(chunk_step, state0, xs)
+        y = jnp.moveaxis(ys, 0, 1).reshape(bb, s, h, p)
+    if D is not None:
+        y = y + x.astype(f32) * D[None, None, :, None]
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_ref(x, w, *, eps=1e-6, weight_offset=0.0):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (weight_offset + w.astype(jnp.float32))
+    return y.astype(x.dtype)

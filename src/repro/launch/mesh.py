@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — required because
+the dry-run must set XLA_FLAGS before any jax initialisation.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import math
+
+    import numpy as np
+    from jax.sharding import Mesh
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) == need:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)} — run "
+            f"under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return Mesh(np.array(devs[:need]).reshape(shape), axes)
+
+
+def fsdp_axes(mesh) -> tuple:
+    """Axes carrying the batch / FSDP dimension."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"
+
+
+def make_mesh_from_plan(tp: int, dp: int, *, pod: int = 1):
+    """Build a mesh realising a ChipLight ``ParallelPlan``'s TP x DP grid
+    (EP/CP ride the data axis, see parallel/plan.py)."""
+    if pod > 1:
+        return jax.make_mesh((pod, dp, tp), ("pod", "data", "model"))
+    return jax.make_mesh((dp, tp), ("data", "model"))

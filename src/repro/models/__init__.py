@@ -1,0 +1,2 @@
+from repro.models.api import build_model, ModelFns  # noqa: F401
+from repro.models.common import ExecConfig  # noqa: F401

@@ -1,0 +1,188 @@
+"""Unified model API: ``build_model(cfg)`` -> ModelFns.
+
+Every family exposes the same surface:
+  init(key, ex) -> params
+  loss(params, batch, ex) -> (scalar, metrics)          [train]
+  prefill(params, batch, ex) -> (logits, cache)         [inference]
+  decode_step(params, cache, tokens, pos, ex) -> (logits, cache)
+  init_cache(batch, seq_len, ex) -> cache
+  input_specs(shape, ex) -> batch of ShapeDtypeStructs  [AOT dry-run]
+  make_batch(key, shape, ex) -> concrete synthetic batch [smoke/e2e]
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, ssm_lm, transformer
+from repro.models.common import ExecConfig
+
+
+@dataclass(frozen=True)
+class ModelFns:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+    input_specs: Callable
+    make_batch: Callable
+
+
+def _token_specs(cfg, shape: ShapeConfig, ex, kind):
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    elif kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:
+        raise ValueError(kind)
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_prefix_tokens, cfg.d_model), ex.compute_dtype)
+        if kind == "train":
+            batch["loss_mask"] = jax.ShapeDtypeStruct((b, s), jnp.float32)
+    if cfg.family == "encdec":
+        batch["encoder_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_len, cfg.d_model), ex.compute_dtype)
+    return batch
+
+
+def _cache_specs(init_cache, cfg, shape: ShapeConfig, ex):
+    cache = jax.eval_shape(
+        lambda: init_cache(shape.global_batch, shape.seq_len, ex))
+    return {
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache,
+    }
+
+
+def _make_token_batch(key, cfg, shape: ShapeConfig, ex, kind):
+    ks = jax.random.split(key, 4)
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab)}
+    if kind == "train":
+        batch["labels"] = jax.random.randint(ks[1], (b, s), 0, cfg.vocab)
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jax.random.normal(
+            ks[2], (b, cfg.n_prefix_tokens, cfg.d_model),
+            ex.compute_dtype)
+        if kind == "train":
+            mask = np.ones((b, s), np.float32)
+            mask[:, :cfg.n_prefix_tokens] = 0.0
+            batch["loss_mask"] = jnp.asarray(mask)
+    if cfg.family == "encdec":
+        batch["encoder_embeds"] = jax.random.normal(
+            ks[3], (b, cfg.encoder_len, cfg.d_model), ex.compute_dtype)
+    return batch
+
+
+def build_model(cfg: ModelConfig) -> ModelFns:
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        def init(key, ex):
+            return transformer.lm_init(key, cfg, ex)
+
+        def loss(params, batch, ex):
+            return transformer.lm_loss(params, batch, cfg, ex)
+
+        def prefill(params, batch, ex):
+            return transformer.lm_prefill(params, batch["tokens"], cfg, ex,
+                                          batch.get("prefix_embeds"))
+
+        def decode_step(params, cache, tokens, pos, ex):
+            return transformer.lm_decode_step(params, cache, tokens, pos,
+                                              cfg, ex)
+
+        def init_cache(batch, seq_len, ex):
+            return transformer.init_cache(cfg, batch, seq_len,
+                                          ex.compute_dtype)
+
+    elif fam == "ssm":
+        def init(key, ex):
+            return ssm_lm.ssm_lm_init(key, cfg, ex)
+
+        def loss(params, batch, ex):
+            return ssm_lm.ssm_lm_loss(params, batch, cfg, ex)
+
+        def prefill(params, batch, ex):
+            return ssm_lm.ssm_lm_prefill(params, batch["tokens"], cfg, ex)
+
+        def decode_step(params, cache, tokens, pos, ex):
+            return ssm_lm.ssm_lm_decode_step(params, cache, tokens, pos,
+                                             cfg, ex)
+
+        def init_cache(batch, seq_len, ex):
+            return ssm_lm.ssm_lm_init_cache(cfg, batch, seq_len,
+                                            ex.compute_dtype)
+
+    elif fam == "hybrid":
+        def init(key, ex):
+            return hybrid.hybrid_init(key, cfg, ex)
+
+        def loss(params, batch, ex):
+            return hybrid.hybrid_loss(params, batch, cfg, ex)
+
+        def prefill(params, batch, ex):
+            return hybrid.hybrid_prefill(params, batch["tokens"], cfg, ex)
+
+        def decode_step(params, cache, tokens, pos, ex):
+            return hybrid.hybrid_decode_step(params, cache, tokens, pos,
+                                             cfg, ex)
+
+        def init_cache(batch, seq_len, ex):
+            return hybrid.hybrid_init_cache(cfg, batch, seq_len,
+                                            ex.compute_dtype)
+
+    elif fam == "encdec":
+        def init(key, ex):
+            return encdec.encdec_init(key, cfg, ex)
+
+        def loss(params, batch, ex):
+            return encdec.encdec_loss(params, batch, cfg, ex)
+
+        def prefill(params, batch, ex):
+            return encdec.encdec_prefill(params, batch["tokens"],
+                                         batch["encoder_embeds"], cfg, ex)
+
+        def decode_step(params, cache, tokens, pos, ex):
+            return encdec.encdec_decode_step(params, cache, tokens, pos,
+                                             cfg, ex)
+
+        def init_cache(batch, seq_len, ex):
+            return encdec.encdec_init_cache(cfg, batch, seq_len,
+                                            ex.compute_dtype)
+
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    def input_specs(shape: ShapeConfig, ex, kind=None):
+        kind = kind or shape.kind
+        if kind in ("train", "prefill"):
+            return _token_specs(cfg, shape, ex, kind)
+        return _cache_specs(init_cache, cfg, shape, ex)
+
+    def make_batch(key, shape: ShapeConfig, ex, kind=None):
+        kind = kind or shape.kind
+        if kind in ("train", "prefill"):
+            return _make_token_batch(key, cfg, shape, ex, kind)
+        return {
+            "tokens": jax.random.randint(key, (shape.global_batch,), 0,
+                                         cfg.vocab),
+            "pos": jnp.int32(shape.seq_len - 1),
+            "cache": init_cache(shape.global_batch, shape.seq_len, ex),
+        }
+
+    return ModelFns(cfg=cfg, init=init, loss=loss, prefill=prefill,
+                    decode_step=decode_step, init_cache=init_cache,
+                    input_specs=input_specs, make_batch=make_batch)

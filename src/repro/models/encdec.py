@@ -1,0 +1,167 @@
+"""Whisper-style encoder-decoder (audio conv frontend STUBBED).
+
+``input_specs`` provides precomputed frame embeddings (B, encoder_len, D) —
+the conv1d+GELU frontend of Whisper is a modality stub per the assignment.
+Encoder: bidirectional attention; decoder: causal self-attn + cross-attn.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attention.attn_init(ks[0], cfg.d_model, cfg.attn, dtype),
+        "mlp": common.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                               cfg.gated_mlp, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln_x": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attention.attn_init(ks[0], cfg.d_model, cfg.attn, dtype),
+        "xattn": attention.attn_init(ks[1], cfg.d_model, cfg.attn, dtype),
+        "mlp": common.mlp_init(ks[2], cfg.d_model, cfg.d_ff,
+                               cfg.gated_mlp, dtype),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig, ex: common.ExecConfig):
+    dtype = ex.param_dtype
+    ke, kd, kemb, kpos = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": common.initializer(kemb, (cfg.vocab, cfg.d_model),
+                                    0.02, dtype),
+        "pos_embed": common.initializer(kpos, (cfg.encoder_len,
+                                               cfg.d_model), 0.02, dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(
+            enc_keys),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(
+            dec_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, ex):
+    """frames: (B, encoder_len, D) stub embeddings -> (B, len, D)."""
+    x = common.shard_batch(
+        frames.astype(ex.compute_dtype) + params["pos_embed"][None], ex)
+
+    def body(x, lp):
+        h = common.norm(x, lp["ln1"], cfg.norm_eps, ex.backend)
+        a, _ = attention.attn_train(lp["attn"], h, cfg.attn, window=None,
+                                    norm_eps=cfg.norm_eps, ex=ex,
+                                    causal=False)
+        x = x + a
+        h = common.norm(x, lp["ln2"], cfg.norm_eps, ex.backend)
+        return common.shard_acts(
+            x + common.mlp_apply(lp["mlp"], h, cfg.gated_mlp), ex), None
+
+    body = ex.wrap_remat(body)
+    x, _ = common.layer_scan(ex, body, x, params["enc_layers"])
+    return common.norm(x, params["enc_norm"], cfg.norm_eps, ex.backend)
+
+
+def _dec_layer(lp, x, enc_out, cfg, ex, collect_kv=False):
+    h = common.norm(x, lp["ln1"], cfg.norm_eps, ex.backend)
+    a, kv = attention.attn_train(lp["attn"], h, cfg.attn, window=None,
+                                 norm_eps=cfg.norm_eps, ex=ex)
+    x = x + a
+    h = common.norm(x, lp["ln_x"], cfg.norm_eps, ex.backend)
+    xa, xkv = attention.attn_train(lp["xattn"], h, cfg.attn, window=None,
+                                   norm_eps=cfg.norm_eps, ex=ex,
+                                   kv_source=enc_out)
+    x = x + xa
+    h = common.norm(x, lp["ln2"], cfg.norm_eps, ex.backend)
+    x = common.shard_acts(x + common.mlp_apply(lp["mlp"], h, cfg.gated_mlp),
+                          ex)
+    return x, (kv, xkv)
+
+
+def encdec_loss(params, batch, cfg: ModelConfig, ex):
+    enc_out = encode(params, batch["encoder_embeds"], cfg, ex)
+    x = common.shard_batch(
+        params["embed"][batch["tokens"]].astype(ex.compute_dtype), ex)
+
+    def body(x, lp):
+        x, _ = _dec_layer(lp, x, enc_out, cfg, ex)
+        return x, None
+
+    body = ex.wrap_remat(body)
+    x, _ = common.layer_scan(ex, body, x, params["dec_layers"])
+    x = common.norm(x, params["final_norm"], cfg.norm_eps, ex.backend)
+    logits = x @ params["embed"].T
+    ce = common.cross_entropy(logits, batch["labels"],
+                              mask=batch.get("loss_mask"))
+    return ce, {"ce": ce, "aux": 0.0}
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype):
+    a = cfg.attn
+    l = cfg.n_layers
+    return {
+        "k": jnp.zeros((l, batch, a.n_kv_heads, seq_len, a.head_dim),
+                       dtype),
+        "v": jnp.zeros((l, batch, a.n_kv_heads, seq_len, a.head_dim),
+                       dtype),
+        # precomputed cross-attention K/V over encoder output
+        "xk": jnp.zeros((l, batch, a.n_kv_heads, cfg.encoder_len,
+                         a.head_dim), dtype),
+        "xv": jnp.zeros((l, batch, a.n_kv_heads, cfg.encoder_len,
+                         a.head_dim), dtype),
+    }
+
+
+def encdec_prefill(params, tokens, frames, cfg: ModelConfig, ex):
+    enc_out = encode(params, frames, cfg, ex)
+    x = common.shard_batch(
+        params["embed"][tokens].astype(ex.compute_dtype), ex)
+
+    def body(x, lp):
+        x, (kv, xkv) = _dec_layer(lp, x, enc_out, cfg, ex, collect_kv=True)
+        return x, (kv[0], kv[1], xkv[0], xkv[1])
+
+    x, (ck, cv, xk, xv) = common.layer_scan(ex, body, x, params["dec_layers"])
+    x = common.norm(x, params["final_norm"], cfg.norm_eps, ex.backend)
+    logits = x[:, -1] @ params["embed"].T
+    return logits, {"k": ck, "v": cv, "xk": xk, "xv": xv}
+
+
+def encdec_decode_step(params, cache, tokens, pos, cfg: ModelConfig, ex):
+    x = common.shard_batch(
+        params["embed"][tokens][:, None, :].astype(ex.compute_dtype), ex)
+    a_cfg = cfg.attn
+
+    def body(x, inp):
+        lp, ck, cv, xk, xv = inp
+        h = common.norm(x, lp["ln1"], cfg.norm_eps, ex.backend)
+        att, ck, cv = attention.attn_decode(
+            lp["attn"], h, ck, cv, pos, a_cfg, is_global=1,
+            norm_eps=cfg.norm_eps, ex=ex)
+        x = x + att
+        h = common.norm(x, lp["ln_x"], cfg.norm_eps, ex.backend)
+        x = x + attention.cross_decode(lp["xattn"], h, xk, xv, a_cfg)
+        h = common.norm(x, lp["ln2"], cfg.norm_eps, ex.backend)
+        x = x + common.mlp_apply(lp["mlp"], h, cfg.gated_mlp)
+        return x, (ck, cv)
+
+    x, (ck, cv) = common.layer_scan(ex, 
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = common.norm(x, params["final_norm"], cfg.norm_eps, ex.backend)
+    logits = x[:, 0] @ params["embed"].T
+    return logits, dict(cache, k=ck, v=cv)

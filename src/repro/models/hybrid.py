@@ -1,0 +1,184 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention+MLP block
+applied every ``hybrid_period`` layers (weights reused per application).
+
+The layer stack is scanned in PERIOD groups: each scan step runs
+``hybrid_period`` SSM layers then the shared block once — no lax.cond, so
+compiled flop counts are exact and the shared-attn KV cache is simply the
+per-period ys (n_apps = n_layers // period entries).  Leftover layers
+(n_layers % period) run unrolled without the shared block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, ssm
+
+
+def _shared_block_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attention.attn_init(ks[0], cfg.d_model, cfg.attn, dtype),
+        "mlp": common.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                               cfg.gated_mlp, dtype),
+    }
+
+
+def hybrid_init(key, cfg: ModelConfig, ex: common.ExecConfig):
+    dtype = ex.param_dtype
+    k_embed, k_layers, k_shared = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+
+    def one(k):
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                "ssm": ssm.ssm_init(k, cfg, dtype)}
+
+    return {
+        "embed": common.initializer(k_embed, (cfg.vocab, cfg.d_model),
+                                    0.02, dtype),
+        "layers": jax.vmap(one)(layer_keys),
+        "shared": _shared_block_init(k_shared, cfg, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.hybrid_period
+
+
+def _split(tree, cfg):
+    p = cfg.hybrid_period
+    n_full = cfg.n_layers // p
+    main = jax.tree.map(
+        lambda t: t[:n_full * p].reshape(n_full, p, *t.shape[1:]), tree)
+    rest = jax.tree.map(lambda t: t[n_full * p:], tree)
+    return main, rest, n_full, cfg.n_layers - n_full * p
+
+
+def _ssm_layer(lp, x, cfg, ex):
+    h = common.norm(x, lp["ln"], cfg.norm_eps, ex.backend)
+    return common.shard_acts(x + ssm.ssm_train(lp["ssm"], h, cfg, ex), ex)
+
+
+def _shared_train(shared, x, cfg, ex):
+    h = common.norm(x, shared["ln1"], cfg.norm_eps, ex.backend)
+    a, kv = attention.attn_train(shared["attn"], h, cfg.attn, window=None,
+                                 norm_eps=cfg.norm_eps, ex=ex)
+    x = x + a
+    h = common.norm(x, shared["ln2"], cfg.norm_eps, ex.backend)
+    x = common.shard_acts(
+        x + common.mlp_apply(shared["mlp"], h, cfg.gated_mlp), ex)
+    return x, kv
+
+
+def hybrid_hidden(params, tokens, cfg: ModelConfig, ex, collect_kv=False):
+    x = common.shard_batch(
+        params["embed"][tokens].astype(ex.compute_dtype), ex)
+    shared = params["shared"]
+    main, rest, n_full, n_rest = _split(params["layers"], cfg)
+    p = cfg.hybrid_period
+
+    def body(x, lp_grp):
+        for j in range(p):
+            lp = jax.tree.map(lambda t: t[j], lp_grp)
+            x = _ssm_layer(lp, x, cfg, ex)
+        x, kv = _shared_train(shared, x, cfg, ex)
+        return x, (kv if collect_kv else None)
+
+    if not collect_kv:
+        body = ex.wrap_remat(body)
+    x, kvs = common.layer_scan(ex, body, x, main)
+    for j in range(n_rest):
+        lp = jax.tree.map(lambda t: t[j], rest)
+        x = _ssm_layer(lp, x, cfg, ex)
+    x = common.norm(x, params["final_norm"], cfg.norm_eps, ex.backend)
+    return x, kvs
+
+
+def hybrid_loss(params, batch, cfg: ModelConfig, ex):
+    x, _ = hybrid_hidden(params, batch["tokens"], cfg, ex)
+    logits = x @ params["embed"].T
+    ce = common.cross_entropy(logits, batch["labels"],
+                              mask=batch.get("loss_mask"))
+    return ce, {"ce": ce, "aux": 0.0}
+
+
+def hybrid_init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype):
+    a = cfg.attn
+    napps = n_shared_applications(cfg)
+    return {
+        "ssm": jax.vmap(lambda _: ssm.ssm_init_state(cfg, batch, dtype))(
+            jnp.arange(cfg.n_layers)),
+        "k": jnp.zeros((napps, batch, a.n_kv_heads, seq_len, a.head_dim),
+                       dtype),
+        "v": jnp.zeros((napps, batch, a.n_kv_heads, seq_len, a.head_dim),
+                       dtype),
+    }
+
+
+def hybrid_prefill(params, tokens, cfg: ModelConfig, ex):
+    """Prefill: shared-attn KV caches come out as the period-scan ys."""
+    x, kvs = hybrid_hidden(params, tokens, cfg, ex, collect_kv=True)
+    logits = x[:, -1] @ params["embed"].T
+    b, s = tokens.shape
+    cache = hybrid_init_cache(cfg, b, s, ex.compute_dtype)
+    ck, cv = kvs
+    return logits, dict(cache, k=ck.astype(ex.compute_dtype),
+                        v=cv.astype(ex.compute_dtype))
+
+
+def hybrid_decode_step(params, cache, tokens, pos, cfg: ModelConfig, ex):
+    x = common.shard_batch(
+        params["embed"][tokens][:, None, :].astype(ex.compute_dtype), ex)
+    shared = params["shared"]
+    a_cfg = cfg.attn
+    p = cfg.hybrid_period
+    main, rest, n_full, n_rest = _split(params["layers"], cfg)
+    st_main, st_rest, _, _ = _split(cache["ssm"], cfg)
+
+    def ssm_step(lp, x, st_conv, st_ssm):
+        h = common.norm(x, lp["ln"], cfg.norm_eps, ex.backend)
+        y, st = ssm.ssm_decode(lp["ssm"], h,
+                               {"conv": st_conv, "ssm": st_ssm}, cfg, ex)
+        return x + y, st
+
+    def body(x, inp):
+        lp_grp, stc, sts, ck, cv = inp
+        new_c, new_s = [], []
+        for j in range(p):
+            lp = jax.tree.map(lambda t: t[j], lp_grp)
+            x, st = ssm_step(lp, x, stc[j], sts[j])
+            new_c.append(st["conv"])
+            new_s.append(st["ssm"])
+        h = common.norm(x, shared["ln1"], cfg.norm_eps, ex.backend)
+        att, ck, cv = attention.attn_decode(
+            shared["attn"], h, ck, cv, pos, a_cfg, is_global=1,
+            norm_eps=cfg.norm_eps, ex=ex)
+        x = x + att
+        h = common.norm(x, shared["ln2"], cfg.norm_eps, ex.backend)
+        x = x + common.mlp_apply(shared["mlp"], h, cfg.gated_mlp)
+        return x, (jnp.stack(new_c), jnp.stack(new_s), ck, cv)
+
+    x, (conv_m, ssm_m, ck, cv) = common.layer_scan(ex, 
+        body, x, (main, st_main["conv"], st_main["ssm"],
+                  cache["k"], cache["v"]))
+
+    rest_c, rest_s = [], []
+    for j in range(n_rest):
+        lp = jax.tree.map(lambda t: t[j], rest)
+        x, st = ssm_step(lp, x, st_rest["conv"][j], st_rest["ssm"][j])
+        rest_c.append(st["conv"])
+        rest_s.append(st["ssm"])
+
+    conv = conv_m.reshape(n_full * p, *conv_m.shape[2:])
+    ssm_st = ssm_m.reshape(n_full * p, *ssm_m.shape[2:])
+    if n_rest:
+        conv = jnp.concatenate([conv, jnp.stack(rest_c)], 0)
+        ssm_st = jnp.concatenate([ssm_st, jnp.stack(rest_s)], 0)
+
+    x = common.norm(x, params["final_norm"], cfg.norm_eps, ex.backend)
+    logits = x[:, 0] @ params["embed"].T
+    return logits, {"ssm": {"conv": conv, "ssm": ssm_st}, "k": ck, "v": cv}

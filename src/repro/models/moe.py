@@ -1,0 +1,109 @@
+"""Mixture-of-Experts layer: top-k router + capacity-padded dispatch.
+
+The dense-compile path builds (E, capacity, D) buckets with sort-free
+rank-based scatter and runs the expert FFNs as one batched einsum — the
+same data movement the Pallas ``moe_gmm`` kernel performs on TPU, and the
+form XLA SPMD can partition over an expert-sharded mesh axis (EP).  An
+explicit shard_map all-to-all variant lives in parallel/moe_a2a.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import common
+
+
+def moe_init(key, d_model, m: MoEConfig, dtype):
+    ks = jax.random.split(key, 4)
+    e, f = m.n_experts, m.d_ff_expert
+    scale = d_model ** -0.5
+    return {
+        "router": common.dense_init(ks[0], d_model, e, dtype,
+                                    scale=d_model ** -0.5),
+        "w1": common.initializer(ks[1], (e, d_model, f), scale, dtype),
+        "w3": common.initializer(ks[2], (e, d_model, f), scale, dtype),
+        "w2": common.initializer(ks[3], (e, f, d_model), f ** -0.5, dtype),
+    }
+
+
+def _capacity(n_tokens: int, m: MoEConfig) -> int:
+    cap = int(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, -(-cap // 8) * 8)   # round up to multiple of 8
+
+
+def router_topk(logits, m: MoEConfig):
+    """logits: (T, E) fp32 -> (weights (T,k), ids (T,k), aux_loss)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, m.top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss
+    e = logits.shape[-1]
+    me = probs.mean(0)                                    # mean router prob
+    one_hot = jax.nn.one_hot(ids[:, 0], e)                # primary expert
+    ce = one_hot.mean(0)                                  # fraction routed
+    aux = e * jnp.sum(me * ce)
+    return weights, ids, aux
+
+
+def _shard_buckets(t, ex):
+    """Constrain an (E, cap, ...) tensor per ex.moe_expert_axis /
+    ex.moe_cap_axes."""
+    if ex.moe_expert_axis is None and ex.batch_axes is None \
+            and ex.moe_cap_axes is None:
+        return t
+    from jax.sharding import PartitionSpec as P
+    cap = ex.moe_cap_axes
+    if ex.moe_expert_axis is not None:
+        spec = P(ex.moe_expert_axis, cap, *([None] * (t.ndim - 2)))
+    else:
+        spec = P(None, cap if cap is not None else ex.batch_axes,
+                 *([None] * (t.ndim - 2)))
+    return jax.lax.with_sharding_constraint(t, spec)
+
+
+def moe_apply(params, x, m: MoEConfig, ex):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = (xf @ params["router"]).astype(jnp.float32)
+    weights, ids, aux = router_topk(logits, m)
+
+    cap = _capacity(t, m)
+    e = m.n_experts
+    flat_e = ids.reshape(-1)                               # (T*k,)
+    tok_of = jnp.repeat(jnp.arange(t), m.top_k)            # (T*k,)
+
+    # rank of each (token, choice) within its expert, in token order
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(e))
+    rank_sorted = jnp.arange(t * m.top_k) - group_start[sorted_e]
+    ranks = jnp.zeros((t * m.top_k,), jnp.int32).at[sort_idx].set(
+        rank_sorted.astype(jnp.int32))
+
+    keep = ranks < cap
+    slot = jnp.where(keep, ranks, cap)                     # cap = drop slot
+
+    # dispatch: buckets (E, cap, D) — the scatter IS the A2A under an
+    # expert-sharded constraint
+    buckets = jnp.zeros((e, cap + 1, d), x.dtype)
+    buckets = buckets.at[flat_e, slot].add(xf[tok_of], mode="drop")
+    buckets = _shard_buckets(buckets[:, :cap], ex)
+
+    # expert FFN: batched gated MLP over the expert dim
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", buckets, params["w1"]))
+         * jnp.einsum("ecd,edf->ecf", buckets, params["w3"]))
+    h = _shard_buckets(h, ex)
+    out_b = _shard_buckets(jnp.einsum("ecf,efd->ecd", h, params["w2"]), ex)
+
+    # combine
+    out_b = jnp.concatenate(
+        [out_b, jnp.zeros((e, 1, d), out_b.dtype)], axis=1)
+    gathered = out_b[flat_e, slot]                         # (T*k, D)
+    gathered = gathered * (weights.reshape(-1, 1)
+                           * keep[:, None]).astype(gathered.dtype)
+    y = gathered.reshape(t, m.top_k, d).sum(1)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,131 @@
+"""Mamba2 (SSD) block: init / train / decode-step."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    d_xbc = di + 2 * s.n_groups * s.d_state
+    return di, nh, d_xbc
+
+
+def ssm_init(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh, d_xbc = ssm_dims(cfg)
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * di + 2 * s.n_groups * s.d_state + nh
+    return {
+        "in_proj": common.dense_init(ks[0], d, d_in_proj, dtype),
+        "out_proj": common.dense_init(ks[1], di, d, dtype),
+        "conv_w": common.initializer(ks[2], (s.conv_width, d_xbc),
+                                     s.conv_width ** -0.5, dtype),
+        "conv_b": jnp.zeros((d_xbc,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": common.initializer(ks[3], (nh,), 0.5, dtype),
+        "gate_norm": jnp.ones((di,), dtype),
+    }
+
+
+def _split_in_proj(proj, cfg: ModelConfig):
+    s = cfg.ssm
+    di, nh, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc, dt = jnp.split(proj, [di, di + di + 2 * gn], axis=-1)
+    return z, xbc, dt  # dt: (..., nh)
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d.  xbc: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xbc.shape[-1])
+    return jax.nn.silu(out + b)
+
+
+def ssm_train(params, x, cfg: ModelConfig, ex):
+    """x: (B,S,D) -> (B,S,D)."""
+    s_cfg = cfg.ssm
+    b, s, _ = x.shape
+    di, nh, _ = ssm_dims(cfg)
+    gn = s_cfg.n_groups * s_cfg.d_state
+
+    proj = x @ params["in_proj"]
+    z, xbc, dt = _split_in_proj(proj, cfg)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [di, di + gn], axis=-1)
+    xs = xs.reshape(b, s, nh, s_cfg.head_dim)
+    bmat = bmat.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    cmat = cmat.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    y = ops.ssd(xs, dt, a, bmat, cmat, chunk=ex.ssd_chunk,
+                backend=ex.backend)
+    y = y + xs * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = common.norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps,
+                    ex.backend)
+    return y @ params["out_proj"]
+
+
+def ssm_init_state(cfg: ModelConfig, batch, dtype):
+    s = cfg.ssm
+    di, nh, d_xbc = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, d_xbc), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssm_decode(params, x, state, cfg: ModelConfig, ex):
+    """One-token step.  x: (B,1,D).  Returns (y, new_state)."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    di, nh, d_xbc = ssm_dims(cfg)
+    gn = s_cfg.n_groups * s_cfg.d_state
+
+    proj = x[:, 0] @ params["in_proj"]                  # (B, dproj)
+    z, xbc, dt = _split_in_proj(proj, cfg)
+    # conv over stored window + current input
+    win = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)
+    conv = jnp.einsum("bwc,wc->bc", win.astype(jnp.float32),
+                      params["conv_w"].astype(jnp.float32))
+    xbc_t = jax.nn.silu(conv + params["conv_b"].astype(jnp.float32))
+    new_conv = win[:, 1:].astype(state["conv"].dtype)
+
+    xs, bmat, cmat = jnp.split(xbc_t, [di, di + gn], axis=-1)
+    xs = xs.reshape(b, nh, s_cfg.head_dim)
+    bmat = bmat.reshape(b, s_cfg.n_groups, s_cfg.d_state)
+    cmat = cmat.reshape(b, s_cfg.n_groups, s_cfg.d_state)
+    rep = nh // s_cfg.n_groups
+    bh = jnp.repeat(bmat, rep, axis=1)                  # (B, nh, N)
+    ch = jnp.repeat(cmat, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    decay = jnp.exp(dt * a[None, :])[..., None, None]   # (B,nh,1,1)
+    upd = (dt[..., None, None] * bh[:, :, None, :] * xs[..., :, None])
+    new_ssm = state["ssm"] * decay + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, ch)
+    y = y + xs * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = common.norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps,
+                    ex.backend)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"conv": new_conv, "ssm": new_ssm}

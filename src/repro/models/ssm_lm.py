@@ -1,0 +1,119 @@
+"""Pure-SSM (Mamba2) language model: embed -> scanned SSD blocks -> head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ref as kref
+from repro.models import common, ssm
+
+
+def ssm_lm_init(key, cfg: ModelConfig, ex: common.ExecConfig):
+    dtype = ex.param_dtype
+    k_embed, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+
+    def one(k):
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                "ssm": ssm.ssm_init(k, cfg, dtype)}
+
+    return {
+        "embed": common.initializer(k_embed, (cfg.vocab, cfg.d_model),
+                                    0.02, dtype),
+        "layers": jax.vmap(one)(layer_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def ssm_lm_hidden(params, tokens, cfg: ModelConfig, ex):
+    x = common.shard_batch(
+        params["embed"][tokens].astype(ex.compute_dtype), ex)
+
+    def body(x, lp):
+        h = common.norm(x, lp["ln"], cfg.norm_eps, ex.backend)
+        return common.shard_acts(x + ssm.ssm_train(lp["ssm"], h, cfg, ex),
+                                 ex), None
+
+    body = ex.wrap_remat(body)
+    x, _ = common.layer_scan(ex, body, x, params["layers"])
+    return common.norm(x, params["final_norm"], cfg.norm_eps, ex.backend)
+
+
+def ssm_lm_loss(params, batch, cfg: ModelConfig, ex):
+    x = ssm_lm_hidden(params, batch["tokens"], cfg, ex)
+    logits = x @ params["embed"].T
+    ce = common.cross_entropy(logits, batch["labels"],
+                              mask=batch.get("loss_mask"))
+    return ce, {"ce": ce, "aux": 0.0}
+
+
+def ssm_lm_init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype):
+    del seq_len  # O(1)-in-seq state
+    return {"ssm": jax.vmap(
+        lambda _: ssm.ssm_init_state(cfg, batch, dtype))(
+            jnp.arange(cfg.n_layers))}
+
+
+def _train_with_state(lp, h, cfg, ex):
+    """Like ssm.ssm_train but also returns (conv_state, ssm_state)."""
+    s_cfg = cfg.ssm
+    b, s, _ = h.shape
+    di, nh, d_xbc = ssm.ssm_dims(cfg)
+    gn = s_cfg.n_groups * s_cfg.d_state
+
+    proj = h @ lp["in_proj"]
+    z, xbc_raw, dt = ssm._split_in_proj(proj, cfg)
+    xbc = ssm._causal_conv(xbc_raw, lp["conv_w"], lp["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [di, di + gn], axis=-1)
+    xs = xs.reshape(b, s, nh, s_cfg.head_dim)
+    bmat = bmat.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    cmat = cmat.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, final_state = kref.ssd_chunked_ref(
+        xs, dt, a, bmat, cmat, chunk=ex.ssd_chunk,
+        unroll=ex.backend == "xla_blocked")
+    y = y + xs * lp["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = common.norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps,
+                    ex.backend)
+    conv_state = xbc_raw[:, -(s_cfg.conv_width - 1):, :]
+    return y @ lp["out_proj"], conv_state, final_state
+
+
+def ssm_lm_prefill(params, tokens, cfg: ModelConfig, ex):
+    x = common.shard_batch(
+        params["embed"][tokens].astype(ex.compute_dtype), ex)
+
+    def body(x, lp):
+        h = common.norm(x, lp["ln"], cfg.norm_eps, ex.backend)
+        y, conv_st, ssm_st = _train_with_state(lp["ssm"], h, cfg, ex)
+        return common.shard_acts(x + y, ex), \
+            (conv_st.astype(ex.compute_dtype), ssm_st)
+
+    x, (conv, st) = common.layer_scan(ex, body, x, params["layers"])
+    x = common.norm(x, params["final_norm"], cfg.norm_eps, ex.backend)
+    logits = x[:, -1] @ params["embed"].T
+    return logits, {"ssm": {"conv": conv, "ssm": st}}
+
+
+def ssm_lm_decode_step(params, cache, tokens, pos, cfg: ModelConfig, ex):
+    del pos  # stateful; position-free
+    x = common.shard_batch(
+        params["embed"][tokens][:, None, :].astype(ex.compute_dtype), ex)
+
+    def body(x, inp):
+        lp, st_conv, st_ssm = inp
+        h = common.norm(x, lp["ln"], cfg.norm_eps, ex.backend)
+        y, st = ssm.ssm_decode(lp["ssm"], h,
+                               {"conv": st_conv, "ssm": st_ssm}, cfg, ex)
+        return x + y, (st["conv"], st["ssm"])
+
+    x, (conv, st) = common.layer_scan(ex, 
+        body, x, (params["layers"], cache["ssm"]["conv"],
+                  cache["ssm"]["ssm"]))
+    x = common.norm(x, params["final_norm"], cfg.norm_eps, ex.backend)
+    logits = x[:, 0] @ params["embed"].T
+    return logits, {"ssm": {"conv": conv, "ssm": st}}

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,  # noqa
+                               cosine_schedule, clip_by_global_norm)
+from repro.optim.compression import (compress_int8, decompress_int8,  # noqa
+                                     ef_compress_update)

@@ -1,0 +1,50 @@
+"""Gradient compression with error feedback (int8 row-scaled).
+
+Distributed-optimisation option for bandwidth-starved DP rings: gradients
+are quantised to int8 with per-row fp32 scales before the all-reduce
+(4x byte reduction — ChipLight's DP traffic term shrinks accordingly; see
+benchmarks/fig8), and the quantisation residual is fed back into the next
+step (error feedback keeps convergence).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g):
+    """-> (int8 values, fp32 scales) with per-last-dim-row scaling."""
+    g32 = g.astype(jnp.float32)
+    flat = g32.reshape(-1, g32.shape[-1]) if g32.ndim > 1 \
+        else g32.reshape(1, -1)
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale, shape):
+    return (q.astype(jnp.float32) * scale).reshape(shape)
+
+
+def ef_compress_update(grads, error_state):
+    """Apply error-feedback compression to a gradient pytree.
+
+    Returns (decompressed grads as would exit the all-reduce,
+    new error state).  error_state is a pytree like grads (fp32).
+    """
+    if error_state is None:
+        error_state = jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress_int8(corrected)
+        deq = decompress_int8(q, s, corrected.shape)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in outs]), \
+        tdef.unflatten([o[1] for o in outs])

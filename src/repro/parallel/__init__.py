@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (param_specs, batch_specs,  # noqa: F401
+                                     cache_specs, named_sharding_tree)
+from repro.parallel.plan import ParallelPlan, plan_from_design  # noqa: F401

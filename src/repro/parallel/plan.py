@@ -1,0 +1,52 @@
+"""Bridge: ChipLight DSE output -> concrete JAX mesh + sharding intent.
+
+A ``ParallelPlan`` captures the strategy the cross-layer optimiser picked.
+On a physical (data, model) / (pod, data, model) mesh:
+  * TP  -> ``model`` axis (intra-MCM HBD, paper Obs 1),
+  * DP / FSDP -> ``data`` (+ ``pod``) axes,
+  * EP  -> ``model`` axis when n_experts divides it (expert sharding),
+           otherwise experts stay TP-sharded on width,
+  * CP  -> the ``data`` axis carries sequence shards for long-context
+           decode (flash-decode KV distribution) — temporally disjoint
+           from EP's use of the same wires, the jax-native analogue of the
+           paper's dynamic link reuse (DESIGN.md §hardware-adaptation),
+  * PP  -> parallel/pipeline.py (shard_map collective_permute stages).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.optimizer import DesignPoint
+from repro.core.traffic import Strategy
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    tp: int
+    dp: int
+    pp: int = 1
+    cp: int = 1
+    ep: int = 1
+    n_micro: int = 1
+    reuse_pair: Optional[tuple] = None
+    link_alloc: Optional[dict] = None
+
+    @property
+    def strategy(self) -> Strategy:
+        return Strategy(tp=self.tp, dp=self.dp, pp=self.pp, cp=self.cp,
+                        ep=self.ep, n_micro=self.n_micro)
+
+    def mesh_shape(self, pod: int = 1):
+        if pod > 1:
+            return (pod, self.dp // pod, self.tp), ("pod", "data", "model")
+        return (self.dp, self.tp), ("data", "model")
+
+
+def plan_from_design(pt: DesignPoint) -> ParallelPlan:
+    s = pt.strategy
+    return ParallelPlan(
+        tp=s.tp, dp=s.dp * s.cp * s.ep,   # CP/EP ride the data axis
+        pp=s.pp, cp=s.cp, ep=s.ep, n_micro=s.n_micro,
+        reuse_pair=pt.topo.reuse_pair if pt.topo else None,
+        link_alloc=dict(pt.topo.link_alloc) if pt.topo else None)

@@ -1,0 +1,2 @@
+from repro.runtime.fault_tolerance import (FaultTolerantLoop,  # noqa: F401
+                                           Watchdog)

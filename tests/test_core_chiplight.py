@@ -1,0 +1,257 @@
+"""Unit + property tests for the ChipLight core (paper §III/§IV)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import (DEFAULT_HW, MCMArch, OITopology, RailDim, Strategy,
+                        Workload, allocate_links, cluster_cost,
+                        derive_physical, enumerate_strategies,
+                        evaluate_point, inner_search, map_intra,
+                        mcm_from_compute, pareto_front, simulate,
+                        traffic_matrix, traffic_volumes)
+from repro.core.optimizer import railx_topology
+from repro.core.prf import PRF
+from repro.core.traffic import reusable_pairs
+from repro.core.workload import paper_workload
+
+W = paper_workload(global_batch=512)
+
+
+# ---------------------------------------------------------------------------
+# Traffic model (paper §III, Obs 1-4)
+# ---------------------------------------------------------------------------
+def test_observation1_ordering():
+    """Obs 1: TP > (CP, EP) > (DP, PP) for the paper's profiling setup."""
+    s = Strategy(tp=8, dp=4, pp=4, cp=2, ep=4, n_micro=16)  # 1024 devices
+    v = traffic_volumes(W, s)
+    assert v["TP"] > v["CP"] and v["TP"] > v["EP"]
+    assert v["EP"] > v["DP"] and v["EP"] > v["PP"]
+
+
+def test_volumes_scale_linearly_in_batch():
+    s = Strategy(tp=8, dp=4, pp=4, cp=2, ep=4, n_micro=16)
+    w2 = Workload(model=W.model, seq_len=W.seq_len,
+                  global_batch=W.global_batch * 2)
+    v1, v2 = traffic_volumes(W, s), traffic_volumes(w2, s)
+    for p in ("TP", "CP", "EP", "PP"):
+        if v1[p] > 0:
+            assert v2[p] == pytest.approx(2 * v1[p], rel=1e-6)
+    assert v2["DP"] == pytest.approx(v1["DP"], rel=1e-6)  # batch-invariant
+
+
+def test_moe_free_arch_has_no_ep_traffic():
+    w = Workload(model=get_config("tinyllama_1_1b"), seq_len=4096,
+                 global_batch=256)
+    v = traffic_volumes(w, Strategy(tp=4, dp=8, pp=2, cp=2, ep=1))
+    assert v["EP"] == 0.0
+
+
+def test_ssm_arch_has_reduced_cp_traffic():
+    """CP for attention-free archs: no ring-attention volume."""
+    w = Workload(model=get_config("mamba2_780m"), seq_len=4096,
+                 global_batch=256)
+    v = traffic_volumes(w, Strategy(tp=2, dp=16, pp=1, cp=4, ep=1))
+    assert v["CP"] == 0.0   # no attention layers
+
+
+def test_traffic_matrix_sparse_and_conserving():
+    """Fig 4: spatially sparse; row sums equal summed per-parallelism
+    volumes."""
+    s = Strategy(tp=4, dp=4, pp=2, cp=2, ep=2, n_micro=8)
+    m = traffic_matrix(W, s)
+    n = s.n_devices
+    assert m.shape == (n, n)
+    vols = traffic_volumes(W, s)
+    np.testing.assert_allclose(m.sum(1), sum(vols.values()), rtol=1e-9)
+    sparsity = (m > 0).mean()
+    assert sparsity < 0.1, f"traffic should be sparse, got {sparsity:.2f}"
+
+
+def test_temporal_reuse_pairs():
+    """Obs 4: CP-EP is the primary reuse pair for MoE + long ctx."""
+    s = Strategy(tp=8, dp=4, pp=1, cp=4, ep=8, n_micro=1)
+    pairs = reusable_pairs(W, s)
+    assert ("CP", "EP") in pairs or ("EP", "CP") in pairs
+
+
+# ---------------------------------------------------------------------------
+# MCM model (beachfront trade-offs)
+# ---------------------------------------------------------------------------
+def test_mcm_link_budget_formula():
+    mcm = MCMArch(n_mcm=64, x=4, y=4, m=6, cpo_ratio=0.6)
+    assert mcm.total_links == 2 * (4 + 4) * mcm.links_per_edge_unit
+
+
+def test_more_hbm_dies_reduce_nop_bw():
+    lo = MCMArch(n_mcm=1, x=4, y=4, m=4)
+    hi = MCMArch(n_mcm=1, x=4, y=4, m=10)
+    assert hi.hbm_bw > lo.hbm_bw
+    assert hi.nop_bw < lo.nop_bw        # beachfront trade-off
+
+
+def test_more_cpo_means_more_links_less_nop():
+    lo = MCMArch(n_mcm=1, x=4, y=4, m=6, cpo_ratio=0.3)
+    hi = MCMArch(n_mcm=1, x=4, y=4, m=6, cpo_ratio=0.9)
+    assert hi.total_links > lo.total_links
+    assert hi.nop_bw < lo.nop_bw
+
+
+# ---------------------------------------------------------------------------
+# OI network model (rail dimensions)
+# ---------------------------------------------------------------------------
+def test_ocs_count_formula():
+    # paper: S = sum_i (prod_{j!=i} N_j) * S_i
+    topo = OITopology(dims=(RailDim(n=8, r=4, k=1), RailDim(n=16, r=6, k=1)))
+    assert topo.n_mcm() == 128
+    assert topo.ocs_count() == 16 * 4 + 8 * 6
+
+
+def test_port_constraint():
+    d = RailDim(n=200, r=4, k=1)
+    assert not d.port_ok(DEFAULT_HW.ocs_ports)
+    assert RailDim(n=100, r=4, k=1).port_ok(DEFAULT_HW.ocs_ports)
+
+
+@given(st.integers(2, 64), st.integers(2, 64), st.integers(1, 40))
+@settings(max_examples=50, deadline=None)
+def test_derive_physical_invariants(n1, n2, links):
+    mcm = MCMArch(n_mcm=n1 * n2, x=4, y=4, m=6)
+    degrees = {"DP": n1, "CP": n2}
+    alloc = {"DP": max(links // 2, 1), "CP": max(links // 2, 1)}
+    topo = derive_physical(degrees, alloc, mcm, n1 * n2)
+    if topo is not None:
+        assert topo.n_mcm() == n1 * n2                      # prod N_i = N
+        assert topo.total_links_used() <= mcm.total_links   # sum R_i <= L
+        for d in topo.dims:
+            assert d.k * d.n <= DEFAULT_HW.ocs_ports or d.k > 1
+
+
+@given(st.dictionaries(st.sampled_from(["DP", "PP", "CP", "EP"]),
+                       st.floats(1e6, 1e12), min_size=1, max_size=4),
+       st.integers(4, 128))
+@settings(max_examples=80, deadline=None)
+def test_allocate_links_conservation(vols, total):
+    alloc = allocate_links(vols, total)
+    assert sum(alloc.values()) <= total
+    assert all(v >= 1 for v in alloc.values())
+
+
+def test_link_reuse_eq1():
+    # paper Eq (1): l_reuse = floor(L * max(v,v') / (sum_others + max))
+    vols = {"CP": 4e9, "EP": 6e9, "DP": 2e9}
+    total = 80
+    alloc = allocate_links(vols, total, reuse_pair=("CP", "EP"))
+    expect = int(total * 6e9 / (2e9 + 6e9))
+    assert alloc["CP"] == alloc["EP"] == expect
+    # reused pair gets MORE than its no-reuse share
+    no_reuse = allocate_links(vols, total)
+    assert alloc["EP"] > no_reuse["EP"]
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+def test_die_cost_monotone_in_area():
+    hw = DEFAULT_HW
+    assert hw.die_cost(400) < hw.die_cost(800)
+    # quarter dies are MORE than 4x cheaper (yield gain) per unit compute
+    assert 4 * hw.die_cost(814 / 4) < hw.die_cost(814)
+
+
+def test_cost_components():
+    mcm = mcm_from_compute(1e6, dies_per_mcm=16, m=6)
+    s = Strategy(tp=8, dp=64, pp=2, cp=1, ep=1, n_micro=8)
+    pt = evaluate_point(W, s, mcm, fabric="oi")
+    if pt is not None:
+        cb = cluster_cost(mcm, pt.topo, fabric="oi")
+        assert cb.silicon > 0 and cb.hbm > 0 and cb.cpo > 0
+        assert cb.ocs > 0
+        assert cb.total == pytest.approx(
+            cb.silicon + cb.hbm + cb.packaging + cb.cpo + cb.ocs
+            + cb.fiber + cb.nic)
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+def test_map_intra_tp_always_inside():
+    mcm = MCMArch(n_mcm=64, x=4, y=4, m=6)
+    got = map_intra(W, Strategy(tp=16, dp=64, pp=1, cp=1, ep=1), mcm)
+    assert got is not None and got[0]["TP"] == 16
+    # TP larger than the package is rejected
+    assert map_intra(W, Strategy(tp=32, dp=32, pp=1, cp=1, ep=1),
+                     mcm) is None
+
+
+def test_simulator_memory_infeasible():
+    mcm = MCMArch(n_mcm=4, x=2, y=2, m=1)   # 16 GB per die
+    s = Strategy(tp=4, dp=4, pp=1, cp=1, ep=1)
+    r = simulate(W, s, mcm)
+    assert not r.feasible and "HBM capacity" in r.reason
+
+
+def test_oi_beats_ib_at_scale():
+    """Insight 1-ish: at large scale the OI fabric wins clearly."""
+    mcm = mcm_from_compute(16e6, dies_per_mcm=16, m=6)
+    best_ib, _ = inner_search(W, mcm, fabric="ib", budget=24, seed=1)
+    best_oi, _ = inner_search(W, mcm, fabric="oi", budget=24, seed=1)
+    assert best_oi.throughput > best_ib.throughput
+
+
+def test_reuse_never_hurts_throughput():
+    mcm = mcm_from_compute(16e6, dies_per_mcm=16, m=8)
+    s = Strategy(tp=8, dp=8, pp=8, cp=4, ep=8, n_micro=32)
+    pt_r = evaluate_point(W, s, mcm, fabric="oi", reuse=True)
+    pt_n = evaluate_point(W, s, mcm, fabric="oi", reuse=False)
+    if pt_r and pt_n:
+        assert pt_r.throughput >= pt_n.throughput * 0.999
+
+
+def test_railx_is_special_case_with_two_dims():
+    mcm = mcm_from_compute(4e6, dies_per_mcm=16, m=6)
+    degrees = {"DP": 16, "CP": 16}
+    vols = {"DP": 5e9, "CP": 8e9}
+    topo = railx_topology(mcm, degrees, vols)
+    assert topo is not None and len(topo.dims) == 2
+    assert topo.dims[0].r == topo.dims[1].r    # uniform split
+
+
+# ---------------------------------------------------------------------------
+# Optimizer / PRF
+# ---------------------------------------------------------------------------
+def test_enumerate_strategies_products():
+    mcm = mcm_from_compute(1e6, dies_per_mcm=16, m=6)
+    for s in enumerate_strategies(W, mcm)[:200]:
+        assert s.n_devices == mcm.n_devices
+
+
+def test_pareto_front_dominance():
+    mcm = mcm_from_compute(1e6, dies_per_mcm=16, m=6)
+    _, pts = inner_search(W, mcm, budget=16, seed=2)
+    front = pareto_front(pts)
+    for i, a in enumerate(front):
+        for b in front[i + 1:]:
+            # no point on the front dominates another
+            assert not (a.cost <= b.cost and a.throughput >= b.throughput)
+
+
+def test_prf_learns_simple_function():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0, 4, size=(200, 3))
+    y = 2 * x[:, 0] - x[:, 1] ** 2 + 0.1 * rng.normal(size=200)
+    model = PRF(seed=1).fit(x[:150], y[:150])
+    pred = model.predict(x[150:])
+    resid = np.mean((pred - y[150:]) ** 2)
+    base = np.mean((y[150:] - y[:150].mean()) ** 2)
+    assert resid < base * 0.5     # clearly better than predicting the mean
+
+
+def test_inner_search_improves_over_random_point():
+    mcm = mcm_from_compute(2e6, dies_per_mcm=16, m=6)
+    best, pts = inner_search(W, mcm, budget=24, seed=3)
+    assert best is not None
+    med = float(np.median([p.throughput for p in pts]))
+    assert best.throughput >= med
