@@ -1,0 +1,101 @@
+"""DSE-engine throughput benchmark -> BENCH_dse.json.
+
+Measures the hot path this repo optimizes: design-point evaluation.
+Compares the batched engine (``repro.dse.batched_sim`` / the fused
+cross-variant sweep) against the scalar ``core.simulator.simulate``
+loop on the SAME points, and records design-points/sec so the perf
+trajectory of this path is tracked across PRs.
+
+    PYTHONPATH=src:. python benchmarks/dse_throughput.py
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.simulator import simulate
+from repro.core.workload import Workload
+from repro.dse.batched_sim import MCMBatch, batched_simulate
+from repro.dse.space import DesignSpace, StrategyBatch
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_dse.json"
+
+
+def _fused_inputs(space):
+    cells = list(space.batches())
+    batch = StrategyBatch.concat([g for _, _, g in cells])
+    local = np.concatenate([np.full(len(g), i, np.int64)
+                            for i, (_, _, g) in enumerate(cells)])
+    mcms = [m for m, _, _ in cells]
+    return batch, MCMBatch.from_mcms(mcms, local), mcms, local
+
+
+def bench_model(name: str, seq_len: int, global_batch: int,
+                C: float = 4e6, scalar_cap: int = 4000,
+                repeats: int = 5) -> dict:
+    w = Workload(model=get_config(name), seq_len=seq_len,
+                 global_batch=global_batch)
+    space = DesignSpace.from_compute(w, C, fabrics=("oi",))
+    batch, mb, mcms, local = _fused_inputs(space)
+    n = len(batch)
+
+    batched_simulate(w, batch, mb, fabric="oi", reuse=True,
+                     hw=mcms[0].hw)                       # warm-up
+    t_batched = min(_timed(lambda: batched_simulate(
+        w, batch, mb, fabric="oi", reuse=True, hw=mcms[0].hw))
+        for _ in range(repeats))
+
+    # scalar oracle loop over the same points (capped + extrapolated
+    # when the grid is huge — the per-point cost is flat)
+    idx = np.arange(n) if n <= scalar_cap else \
+        np.random.default_rng(0).choice(n, scalar_cap, replace=False)
+    strategies = batch.take(idx).to_strategies()
+    t0 = time.perf_counter()
+    for i, s in zip(idx, strategies):
+        simulate(w, s, mcms[int(local[i])], fabric="oi", topo=None,
+                 reuse=True)
+    t_scalar = (time.perf_counter() - t0) / len(idx) * n
+
+    return {
+        "model": name, "C_tflops": C, "design_points": int(n),
+        "mcm_variants": len(mcms),
+        "batched_s": t_batched, "scalar_s": t_scalar,
+        "scalar_sampled": int(len(idx)),
+        "speedup": t_scalar / t_batched,
+        "points_per_s_batched": n / t_batched,
+        "points_per_s_scalar": n / t_scalar,
+    }
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run() -> dict:
+    results = [
+        bench_model("tinyllama_1_1b", 4096, 512),
+        bench_model("qwen3_moe_235b_a22b", 10240, 512),
+        bench_model("mixtral_8x7b", 8192, 256),
+    ]
+    rows = [[r["model"], r["design_points"], f"{r['batched_s'] * 1e3:.2f}",
+             f"{r['scalar_s'] * 1e3:.1f}", f"{r['speedup']:.0f}",
+             f"{r['points_per_s_batched']:.0f}"] for r in results]
+    emit("dse_throughput", rows,
+         ["model", "points", "batched_ms", "scalar_ms", "speedup",
+          "points_per_s"])
+    payload = {"bench": "dse_throughput", "results": results,
+               "min_speedup": min(r["speedup"] for r in results)}
+    OUT.write_text(json.dumps(payload, indent=2))
+    print(f"wrote {OUT}  (min speedup {payload['min_speedup']:.0f}x)")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -110,6 +110,18 @@ def allocate_links(volumes: Dict[str, float], total_links: int,
                 alloc[p] = max(int(rest * v / ssum), 1) if ssum else 0
             alloc[a] = l_reuse
             alloc[b] = l_reuse      # same physical links, reused in time
+            # trim rounding/min-1 overshoot — the pair occupies its links
+            # ONCE; charge them to whichever member came first in ``inter``
+            first = a if list(inter).index(a) < list(inter).index(b) else b
+            usage = {p: (alloc[p] if p not in (a, b) else
+                         (alloc[p] if p == first else 0)) for p in inter}
+            while sum(usage.values()) > total_links \
+                    and max(usage.values()) > 1:
+                big = max(usage, key=usage.get)
+                usage[big] -= 1
+                alloc[big] -= 1
+                if big == first:
+                    alloc[a] = alloc[b] = alloc[big]
             return alloc
     ssum = sum(inter.values())
     for p, v in inter.items():

@@ -1,12 +1,15 @@
 """ChipLight cross-layer optimisation (paper §IV-B, Fig 6).
 
 Nested flow:
-  * inner search — PARALLEL-CENTRIC para-topo co-exploration: sample
-    parallelism degrees (enumeration when small, PRF surrogate when large),
-    project traffic (network-independent), map TP (+ maybe one more group)
-    intra-MCM, allocate links traffic-proportionally (Eq. l_p), apply
-    dynamic link reuse (Eq. 1), derive the fewest-OCS physical topology,
-    evaluate with the simulator.
+  * inner search — PARALLEL-CENTRIC para-topo co-exploration: scan the
+    ENTIRE strategy grid with the vectorized batched simulator
+    (repro.dse), then give the top-throughput candidates the full
+    scalar treatment — project traffic (network-independent), map TP
+    (+ maybe one more group) intra-MCM, allocate links
+    traffic-proportionally (Eq. l_p), apply dynamic link reuse (Eq. 1),
+    derive the fewest-OCS physical topology, evaluate with the
+    simulator.  (Surrogate sampling now lives in
+    repro.dse.search.search_prf_ucb for budgeted sweeps.)
   * outer search — heuristic planner (§IV-B-3) reads simulator logs
     (compute util, memory pressure, comm bottleneck) and moves the MCM
     architecture (N, x, y, m, r) to break the bottleneck or trim waste.
@@ -29,7 +32,6 @@ from repro.core.hardware import HW, DEFAULT_HW
 from repro.core.mcm import MCMArch, mcm_from_compute
 from repro.core.network import OITopology, RailDim, allocate_links, \
     derive_physical
-from repro.core.prf import PRF
 from repro.core.simulator import SimResult, map_intra, simulate
 from repro.core.traffic import Strategy, traffic_volumes, reusable_pairs
 from repro.core.workload import Workload
@@ -86,11 +88,6 @@ def enumerate_strategies(w: Workload, mcm: MCMArch,
                     if map_intra(w, s, mcm) is not None:
                         out.append(s)
     return out
-
-
-def _features(s: Strategy) -> List[float]:
-    return [math.log2(max(x, 1)) for x in
-            (s.tp, s.dp, s.pp, s.cp, s.ep, s.n_micro)]
 
 
 # ---------------------------------------------------------------------------
@@ -151,47 +148,42 @@ def inner_search(w: Workload, mcm: MCMArch, fabric: str = "oi",
                  reuse: bool = True, budget: int = 64,
                  hw: Optional[HW] = None, seed: int = 0
                  ) -> Tuple[Optional[DesignPoint], List[DesignPoint]]:
-    """Parallel-centric para-topo search; returns (best, evaluated)."""
-    hw = hw or mcm.hw
-    cands = enumerate_strategies(w, mcm)
-    if not cands:
-        return None, []
-    rng = np.random.default_rng(seed)
-    evaluated: List[DesignPoint] = []
+    """Parallel-centric para-topo search; returns (best, evaluated).
 
-    def run(s: Strategy):
+    The batched engine (repro.dse) scans the ENTIRE strategy grid in one
+    vectorized call — no surrogate sampling needed at the strategy level
+    — then the top ``budget`` candidates by batched throughput get the
+    full scalar treatment (physical-topology derivation, exact OCS
+    cost).  ``seed`` is kept for API compatibility; the scan is
+    deterministic.
+    """
+    del seed
+    hw = hw or mcm.hw
+    # lazy import: repro.dse depends on repro.core, not vice versa
+    from repro.dse.batched_sim import batched_simulate
+    from repro.dse.space import enumerate_strategy_batch
+
+    batch = enumerate_strategy_batch(w, mcm)
+    if not len(batch):
+        return None, []
+    res = batched_simulate(w, batch, mcm, fabric=fabric, reuse=reuse, hw=hw)
+    feas = np.nonzero(res.feasible)[0]
+    ranked = feas[np.argsort(-res.throughput[feas], kind="stable")]
+
+    # walk the ranking until `budget` points survive the scalar pass —
+    # the batched scan is topology-blind, so a candidate can still fail
+    # physical-rail derivation; keep going (bounded, like railx_search)
+    # rather than return nothing.
+    evaluated: List[DesignPoint] = []
+    for i in ranked[: budget * 4]:
+        s = Strategy(tp=int(batch.tp[i]), dp=int(batch.dp[i]),
+                     pp=int(batch.pp[i]), cp=int(batch.cp[i]),
+                     ep=int(batch.ep[i]), n_micro=int(batch.n_micro[i]))
         pt = evaluate_point(w, s, mcm, fabric, reuse, hw)
         if pt is not None:
             evaluated.append(pt)
-        return pt
-
-    if len(cands) <= budget:
-        for s in cands:
-            run(s)
-    else:
-        # PRF-surrogate loop (paper: black-box sampling, e.g. PRF [33])
-        init = min(budget // 2, len(cands))
-        order = rng.permutation(len(cands))
-        tried = set()
-        for i in order[:init]:
-            tried.add(int(i))
-            run(cands[int(i)])
-        while len(tried) < min(budget, len(cands)):
-            pts = [(p.strategy, p.throughput) for p in evaluated]
-            if len(pts) >= 4:
-                x = np.array([_features(s) for s, _ in pts])
-                y = np.array([t for _, t in pts])
-                model = PRF(seed=int(rng.integers(1 << 30))).fit(x, y)
-                rest = [i for i in range(len(cands)) if i not in tried]
-                xs = np.array([_features(cands[i]) for i in rest])
-                scores = model.ucb(xs, kappa=1.0)
-                pick = rest[int(np.argmax(scores))]
-            else:
-                rest = [i for i in range(len(cands)) if i not in tried]
-                pick = int(rng.choice(rest))
-            tried.add(pick)
-            run(cands[pick])
-
+            if len(evaluated) >= budget:
+                break
     best = max(evaluated, key=lambda p: p.throughput, default=None)
     return best, evaluated
 

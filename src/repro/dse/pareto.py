@@ -1,0 +1,96 @@
+"""Fast non-dominated sorting over batched DSE objectives.
+
+Objectives arrive as an (N, K) float matrix plus a per-column sense
+(maximize / minimize).  ``pareto_mask`` finds the non-dominated set with
+chunked O(N^2) numpy broadcasting (no Python pair loops) — a few
+milliseconds for tens of thousands of points.  ``nondominated_sort``
+peels fronts NSGA-II-style and ``crowding_distance`` supplies the
+diversity metric for the evolutionary driver.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def _as_max(objectives: np.ndarray, maximize: Sequence[bool]) -> np.ndarray:
+    obj = np.asarray(objectives, np.float64)
+    if obj.ndim != 2:
+        raise ValueError("objectives must be (N, K)")
+    sign = np.where(np.asarray(maximize, bool), 1.0, -1.0)
+    return obj * sign
+
+
+def pareto_mask(objectives: np.ndarray, maximize: Sequence[bool],
+                chunk: int = 512) -> np.ndarray:
+    """(N,) bool — True where no other point weakly dominates the point
+    (>= in every objective, > in at least one).  Duplicate points keep
+    each other (neither strictly dominates)."""
+    M = _as_max(objectives, maximize)
+    n = M.shape[0]
+    keep = np.ones(n, bool)
+    # a point with any NaN objective never survives
+    keep &= ~np.isnan(M).any(1)
+    idx = np.nonzero(keep)[0]
+    Mv = M[idx]
+    alive = np.ones(len(idx), bool)
+    for lo in range(0, len(idx), chunk):
+        blk = Mv[lo:lo + chunk]                       # (c, K)
+        # dominated[j] = exists i alive: M_i >= blk_j (all) and > (any)
+        ge = (Mv[:, None, :] >= blk[None, :, :]).all(-1)      # (n, c)
+        gt = (Mv[:, None, :] > blk[None, :, :]).any(-1)
+        dom = (ge & gt & alive[:, None]).any(0)
+        alive[lo:lo + chunk] &= ~dom
+    keep[idx] = alive
+    return keep
+
+
+def nondominated_sort(objectives: np.ndarray, maximize: Sequence[bool],
+                      max_fronts: int = 0) -> np.ndarray:
+    """NSGA-II fast non-dominated sort: (N,) int rank, 0 = Pareto front.
+
+    Points never ranked (NaN objectives, or beyond ``max_fronts``) get
+    rank N (worst)."""
+    obj = np.asarray(objectives, np.float64)
+    n = obj.shape[0]
+    ranks = np.full(n, n, np.int64)
+    remaining = ~np.isnan(obj).any(1)
+    rank = 0
+    while remaining.any():
+        if max_fronts and rank >= max_fronts:
+            break
+        idx = np.nonzero(remaining)[0]
+        front = pareto_mask(obj[idx], maximize)
+        ranks[idx[front]] = rank
+        remaining[idx[front]] = False
+        rank += 1
+    return ranks
+
+
+def crowding_distance(objectives: np.ndarray,
+                      maximize: Sequence[bool]) -> np.ndarray:
+    """NSGA-II crowding distance within one front (larger = lonelier)."""
+    M = _as_max(objectives, maximize)
+    n, k = M.shape
+    if n <= 2:
+        return np.full(n, np.inf)
+    dist = np.zeros(n)
+    for j in range(k):
+        order = np.argsort(M[:, j], kind="stable")
+        span = M[order[-1], j] - M[order[0], j]
+        dist[order[0]] = dist[order[-1]] = np.inf
+        if span <= 0:
+            continue
+        gaps = (M[order[2:], j] - M[order[:-2], j]) / span
+        dist[order[1:-1]] += gaps
+    return dist
+
+
+def pareto_front_indices(objectives: np.ndarray, maximize: Sequence[bool]
+                         ) -> np.ndarray:
+    """Indices of the non-dominated set, best-first by objective 0."""
+    mask = pareto_mask(objectives, maximize)
+    idx = np.nonzero(mask)[0]
+    M = _as_max(objectives[idx], maximize)
+    return idx[np.argsort(-M[:, 0], kind="stable")]

@@ -1,0 +1,405 @@
+"""Search drivers over the batched DSE engine.
+
+All drivers share one ``BatchedEvaluator`` interface — evaluate a
+``StrategyBatch``, get SoA results — plus an evaluation cache keyed by
+design-point hash, so revisited points (evolutionary loops, repeated
+sweeps) cost nothing.  Drivers:
+
+  * ``search_exhaustive`` — the whole grid in one batched call;
+  * ``search_random``     — uniform subsample (baseline);
+  * ``search_prf_ucb``    — batched PRF surrogate + UCB acquisition
+                            (the paper's black-box sampler, batched);
+  * ``search_nsga2``      — NSGA-II-lite evolutionary loop (rank +
+                            crowding selection, log2-space crossover /
+                            mutation, nearest-valid-point repair).
+
+``sweep_design_space`` runs a driver over every (MCM, fabric) cell of a
+``DesignSpace`` and returns the cross-layer Pareto surface over
+(throughput, cost, power).  Costs here exclude the OCS component (it
+needs the derived physical topology); ``refine_top_points`` re-evaluates
+winners through the scalar oracle for exact topologies and costs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost import cluster_cost
+from repro.core.hardware import HW
+from repro.core.mcm import MCMArch
+from repro.core.workload import Workload
+from repro.dse.batched_sim import batched_simulate
+from repro.dse.pareto import (crowding_distance, nondominated_sort,
+                              pareto_mask)
+from repro.dse.space import (DesignSpace, StrategyBatch,
+                             enumerate_strategy_batch)
+
+Objective = Tuple[str, bool]          # (result field, maximize?)
+DEFAULT_OBJECTIVES: Tuple[Objective, ...] = (("throughput", True),
+                                             ("power", False))
+
+
+# ---------------------------------------------------------------------------
+# Cached batched evaluation
+# ---------------------------------------------------------------------------
+_RESULT_FIELDS = ("feasible", "step_time", "throughput", "mfu", "power")
+
+
+class BatchedEvaluator:
+    """Batched evaluate with a design-point cache for one (workload, MCM,
+    fabric, reuse) cell.  ``cost`` is the topology-independent cluster
+    cost of the cell (constant across strategies; OCS excluded)."""
+
+    def __init__(self, w: Workload, mcm: MCMArch, fabric: str = "oi",
+                 reuse: bool = True, hw: Optional[HW] = None,
+                 backend: str = "numpy"):
+        self.w = w
+        self.mcm = mcm
+        self.fabric = fabric
+        self.reuse = reuse
+        self.hw = hw or mcm.hw
+        self.backend = backend
+        self.cost = cluster_cost(mcm, None, fabric=fabric, hw=self.hw).total
+        self._cache: Dict[Tuple[int, ...], Tuple] = {}
+        self.n_sim = 0
+        self.n_hits = 0
+
+    def evaluate(self, batch: StrategyBatch) -> Dict[str, np.ndarray]:
+        keys = batch.keys()
+        miss = [i for i, k in enumerate(keys) if k not in self._cache]
+        self.n_hits += len(keys) - len(miss)
+        if miss:
+            sub = batch.take(np.array(miss, np.int64))
+            res = batched_simulate(self.w, sub, self.mcm, self.fabric,
+                                   self.reuse, self.hw, self.backend)
+            self.n_sim += len(sub)
+            cols = [np.asarray(getattr(res, f)) for f in _RESULT_FIELDS]
+            for j, i in enumerate(miss):
+                self._cache[keys[i]] = tuple(c[j] for c in cols)
+        rows = [self._cache[k] for k in keys]
+        out = {f: np.array([r[j] for r in rows])
+               for j, f in enumerate(_RESULT_FIELDS)}
+        out["cost"] = np.full(len(batch), self.cost)
+        return out
+
+
+@dataclass
+class SearchResult:
+    """Evaluated subset of one cell's strategy grid."""
+
+    batch: StrategyBatch                  # evaluated points
+    metrics: Dict[str, np.ndarray]        # feasible/step_time/... arrays
+    grid_size: int                        # full candidate-grid size
+    n_sim: int                            # simulator evaluations spent
+    n_cache_hits: int
+
+    @property
+    def best(self) -> Optional[int]:
+        t = self.metrics["throughput"]
+        if not len(t) or not self.metrics["feasible"].any():
+            return None
+        return int(np.argmax(t))
+
+    def pareto_indices(self,
+                       objectives: Sequence[Objective] = DEFAULT_OBJECTIVES
+                       ) -> np.ndarray:
+        feas = self.metrics["feasible"]
+        obj = np.stack([self.metrics[f] for f, _ in objectives], 1)
+        obj = np.where(feas[:, None], obj, np.nan)
+        return np.nonzero(pareto_mask(obj, [m for _, m in objectives]))[0]
+
+
+def _result(ev: BatchedEvaluator, grid: StrategyBatch, idx: np.ndarray
+            ) -> SearchResult:
+    sub = grid.take(idx)
+    return SearchResult(batch=sub, metrics=ev.evaluate(sub),
+                        grid_size=len(grid), n_sim=ev.n_sim,
+                        n_cache_hits=ev.n_hits)
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+def search_exhaustive(ev: BatchedEvaluator,
+                      grid: Optional[StrategyBatch] = None) -> SearchResult:
+    grid = grid if grid is not None else enumerate_strategy_batch(
+        ev.w, ev.mcm)
+    return _result(ev, grid, np.arange(len(grid)))
+
+
+def search_random(ev: BatchedEvaluator, budget: int, seed: int = 0,
+                  grid: Optional[StrategyBatch] = None) -> SearchResult:
+    grid = grid if grid is not None else enumerate_strategy_batch(
+        ev.w, ev.mcm)
+    rng = np.random.default_rng(seed)
+    n = len(grid)
+    idx = rng.permutation(n)[: min(budget, n)]
+    return _result(ev, grid, np.sort(idx))
+
+
+def search_prf_ucb(ev: BatchedEvaluator, budget: int, seed: int = 0,
+                   batch_size: int = 16, kappa: float = 1.0,
+                   grid: Optional[StrategyBatch] = None) -> SearchResult:
+    """Batched PRF-UCB: random init, then acquire top-UCB *batches*."""
+    from repro.core.prf import PRF
+    grid = grid if grid is not None else enumerate_strategy_batch(
+        ev.w, ev.mcm)
+    n = len(grid)
+    budget = min(budget, n)
+    rng = np.random.default_rng(seed)
+    feats = grid.features()
+    tried = list(rng.permutation(n)[: max(min(budget // 2, n), 1)])
+    thpt = ev.evaluate(grid.take(np.array(tried)))["throughput"]
+    scores = list(thpt)
+    while len(tried) < budget:
+        rest = np.setdiff1d(np.arange(n), np.array(tried))
+        if len(scores) >= 4:
+            model = PRF(seed=int(rng.integers(1 << 30))).fit(
+                feats[np.array(tried)], np.array(scores))
+            ucb = model.ucb(feats[rest], kappa=kappa)
+            order = rest[np.argsort(-ucb)]
+        else:
+            order = rng.permutation(rest)
+        pick = order[: min(batch_size, budget - len(tried))]
+        got = ev.evaluate(grid.take(pick))["throughput"]
+        tried.extend(int(i) for i in pick)
+        scores.extend(got)
+    return _result(ev, grid, np.array(tried))
+
+
+def search_nsga2(ev: BatchedEvaluator, pop_size: int = 32,
+                 generations: int = 12, seed: int = 0,
+                 objectives: Sequence[Objective] = DEFAULT_OBJECTIVES,
+                 mutation_p: float = 0.3,
+                 grid: Optional[StrategyBatch] = None) -> SearchResult:
+    """NSGA-II-lite over the valid strategy grid.
+
+    Genomes are grid indices; crossover/mutation act in log2-degree
+    space and land back on the grid via nearest-valid-point repair, so
+    every individual is a real (mappable) design point.  The cache makes
+    revisits free."""
+    grid = grid if grid is not None else enumerate_strategy_batch(
+        ev.w, ev.mcm)
+    n = len(grid)
+    if n == 0:
+        return _result(ev, grid, np.arange(0))
+    rng = np.random.default_rng(seed)
+    feats = grid.features()                      # (n, 6) log2 coords
+    pop = rng.permutation(n)[: min(pop_size, n)]
+    seen = set(int(i) for i in pop)
+
+    def rank_crowd(idx: np.ndarray):
+        m = ev.evaluate(grid.take(idx))
+        obj = np.stack([m[f] for f, _ in objectives], 1)
+        obj = np.where(m["feasible"][:, None], obj, np.nan)
+        maximize = [mx for _, mx in objectives]
+        ranks = nondominated_sort(obj, maximize)
+        crowd = np.zeros(len(idx))
+        for r in np.unique(ranks):
+            sel = ranks == r
+            if r >= len(idx) or sel.sum() == 0:
+                continue
+            sub = np.nan_to_num(obj[sel], nan=-np.inf)
+            crowd[sel] = crowding_distance(sub, maximize)
+        return ranks, crowd
+
+    def repair(coords: np.ndarray) -> np.ndarray:
+        """Nearest valid grid point (L1 in log2 space) per child row."""
+        d = np.abs(feats[None, :, :] - coords[:, None, :]).sum(-1)
+        return np.argmin(d, 1)
+
+    for _ in range(generations):
+        ranks, crowd = rank_crowd(pop)
+
+        def tourney() -> int:
+            a, b = rng.integers(len(pop), size=2)
+            if (ranks[a], -crowd[a]) <= (ranks[b], -crowd[b]):
+                return a
+            return b
+
+        children = []
+        for _ in range(len(pop)):
+            pa, pb = feats[pop[tourney()]], feats[pop[tourney()]]
+            mask = rng.random(feats.shape[1]) < 0.5
+            child = np.where(mask, pa, pb)
+            if rng.random() < mutation_p:
+                j = rng.integers(feats.shape[1])
+                child[j] += rng.choice([-1.0, 1.0])
+            children.append(child)
+        kid_idx = repair(np.stack(children))
+        union = np.unique(np.concatenate([pop, kid_idx]))
+        seen.update(int(i) for i in kid_idx)
+        ranks_u, crowd_u = rank_crowd(union)
+        order = np.lexsort((-crowd_u, ranks_u))
+        pop = union[order[: min(pop_size, len(union))]]
+
+    return _result(ev, grid, np.array(sorted(seen), np.int64))
+
+
+DRIVERS: Dict[str, Callable] = {
+    "exhaustive": search_exhaustive,
+    "random": search_random,
+    "prf": search_prf_ucb,
+    "nsga2": search_nsga2,
+}
+
+
+# ---------------------------------------------------------------------------
+# Cross-layer sweep over a DesignSpace
+# ---------------------------------------------------------------------------
+@dataclass
+class SweepResult:
+    """Concatenated evaluations across every (MCM, fabric) cell."""
+
+    space: DesignSpace
+    batch: StrategyBatch
+    mcm_idx: np.ndarray            # (B,) index into space.mcms
+    fabric: np.ndarray             # (B,) str
+    metrics: Dict[str, np.ndarray]
+    n_sim: int = 0
+    n_cache_hits: int = 0
+    elapsed_s: float = 0.0
+
+    def __len__(self) -> int:
+        return len(self.batch)
+
+    @property
+    def best(self) -> Optional[int]:
+        if not len(self) or not self.metrics["feasible"].any():
+            return None
+        return int(np.argmax(self.metrics["throughput"]))
+
+    def pareto_indices(self) -> np.ndarray:
+        """Non-dominated set over (throughput max, cost min, power min)."""
+        feas = self.metrics["feasible"]
+        obj = np.stack([self.metrics["throughput"], self.metrics["cost"],
+                        self.metrics["power"]], 1)
+        obj = np.where(feas[:, None], obj, np.nan)
+        mask = pareto_mask(obj, [True, False, False])
+        idx = np.nonzero(mask)[0]
+        return idx[np.argsort(-self.metrics["throughput"][idx])]
+
+    def describe(self, i: int) -> Dict:
+        b = self.batch
+        mcm = self.space.mcms[int(self.mcm_idx[i])]
+        return {
+            "strategy": {"TP": int(b.tp[i]), "DP": int(b.dp[i]),
+                         "PP": int(b.pp[i]), "CP": int(b.cp[i]),
+                         "EP": int(b.ep[i]), "n_micro": int(b.n_micro[i])},
+            "mcm": {"n_mcm": mcm.n_mcm, "x": mcm.x, "y": mcm.y, "m": mcm.m,
+                    "cpo_ratio": mcm.cpo_ratio},
+            "fabric": str(self.fabric[i]),
+            "throughput_tok_s": float(self.metrics["throughput"][i]),
+            "step_time_s": float(self.metrics["step_time"][i]),
+            "mfu": float(self.metrics["mfu"][i]),
+            "cost_usd": float(self.metrics["cost"][i]),
+            "power_w": float(self.metrics["power"][i]),
+        }
+
+
+def _sweep_fused(space: DesignSpace, backend: str) -> SweepResult:
+    """Exhaustive sweep as ONE batched_simulate call per fabric: the
+    strategy grids of every MCM variant are concatenated and evaluated
+    against an ``MCMBatch`` of per-point parameters — no per-cell
+    Python, which is what makes small-grid model configs fast too."""
+    import time
+    from repro.dse.batched_sim import MCMBatch
+    t0 = time.perf_counter()
+    cells = list(space.batches())
+    by_fabric: Dict[str, List] = {}
+    for mcm, fabric, grid in cells:
+        by_fabric.setdefault(fabric, []).append((mcm, grid))
+    batches, mcm_idx, fabric_col, metric_parts, n_sim = [], [], [], [], 0
+    for fabric, sub in by_fabric.items():
+        batch = StrategyBatch.concat([g for _, g in sub])
+        local = np.concatenate([np.full(len(g), i, np.int64)
+                                for i, (_, g) in enumerate(sub)])
+        mcms = [m for m, _ in sub]
+        res = batched_simulate(space.workload, batch,
+                               MCMBatch.from_mcms(mcms, local),
+                               fabric=fabric, reuse=space.reuse,
+                               hw=mcms[0].hw, backend=backend)
+        costs = np.array([cluster_cost(m, None, fabric=fabric,
+                                       hw=m.hw).total for m in mcms])[local]
+        batches.append(batch)
+        mcm_idx.append(np.array([space.mcms.index(m) for m in mcms],
+                                np.int64)[local])
+        fabric_col.append(np.full(len(batch), fabric))
+        metric_parts.append({**{f: np.asarray(getattr(res, f))
+                                for f in _RESULT_FIELDS}, "cost": costs})
+        n_sim += len(batch)
+    elapsed = time.perf_counter() - t0
+    if not batches:
+        empty = StrategyBatch.from_strategies([])
+        return SweepResult(space, empty, np.zeros(0, np.int64),
+                           np.zeros(0, "<U8"),
+                           {f: np.zeros(0) for f in
+                            (*_RESULT_FIELDS, "cost")}, 0, 0, elapsed)
+    metrics = {f: np.concatenate([p[f] for p in metric_parts])
+               for f in (*_RESULT_FIELDS, "cost")}
+    return SweepResult(space, StrategyBatch.concat(batches),
+                       np.concatenate(mcm_idx),
+                       np.concatenate(fabric_col), metrics,
+                       n_sim=n_sim, n_cache_hits=0, elapsed_s=elapsed)
+
+
+def sweep_design_space(space: DesignSpace, driver: str = "exhaustive",
+                       backend: str = "numpy", seed: int = 0,
+                       **driver_kw) -> SweepResult:
+    """Run one driver over every (MCM, fabric) cell and concatenate.
+    The exhaustive driver takes the fused cross-variant path (one
+    batched call per fabric)."""
+    import time
+    if driver == "exhaustive":
+        return _sweep_fused(space, backend)
+    run = DRIVERS[driver]
+    t0 = time.perf_counter()
+    parts: List[Tuple[int, str, SearchResult]] = []
+    for ci, (mcm, fabric, grid) in enumerate(space.batches()):
+        ev = BatchedEvaluator(space.workload, mcm, fabric, space.reuse,
+                              backend=backend)
+        kw = dict(driver_kw)
+        kw.setdefault("seed", seed + ci)
+        res = run(ev, grid=grid, **kw)
+        mi = space.mcms.index(mcm)
+        parts.append((mi, fabric, res))
+    elapsed = time.perf_counter() - t0
+    if not parts:
+        empty = StrategyBatch.from_strategies([])
+        return SweepResult(space, empty, np.zeros(0, np.int64),
+                           np.zeros(0, "<U8"),
+                           {f: np.zeros(0) for f in
+                            (*_RESULT_FIELDS, "cost")}, 0, 0, elapsed)
+    batch = StrategyBatch.concat([r.batch for _, _, r in parts])
+    mcm_idx = np.concatenate([np.full(len(r.batch), mi, np.int64)
+                              for mi, _, r in parts])
+    fabric = np.concatenate([np.full(len(r.batch), fb)
+                             for _, fb, r in parts])
+    metrics = {f: np.concatenate([r.metrics[f] for _, _, r in parts])
+               for f in (*_RESULT_FIELDS, "cost")}
+    return SweepResult(space, batch, mcm_idx, fabric, metrics,
+                       n_sim=sum(r.n_sim for _, _, r in parts),
+                       n_cache_hits=sum(r.n_cache_hits for _, _, r in parts),
+                       elapsed_s=elapsed)
+
+
+def refine_top_points(sweep: SweepResult, top_k: int = 8):
+    """Re-evaluate the best sweep points through the scalar oracle —
+    derives real OI topologies and exact (OCS-inclusive) costs.
+    Returns core.optimizer.DesignPoint objects, best-first."""
+    from repro.core.optimizer import evaluate_point   # lazy: no cycle
+    feas = np.nonzero(sweep.metrics["feasible"])[0]
+    order = feas[np.argsort(-sweep.metrics["throughput"][feas])][:top_k]
+    out = []
+    for i in order:
+        mcm = sweep.space.mcms[int(sweep.mcm_idx[i])]
+        s = sweep.batch.take(np.array([i])).to_strategies()[0]
+        pt = evaluate_point(sweep.space.workload, s, mcm,
+                            fabric=str(sweep.fabric[i]),
+                            reuse=sweep.space.reuse)
+        if pt is not None:
+            out.append(pt)
+    out.sort(key=lambda p: -p.throughput)
+    return out

@@ -20,6 +20,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+
+def _compiler_params(**kw):
+    from repro.kernels.ops import tpu_compiler_params  # lazy: avoid cycle
+    return tpu_compiler_params(**kw)
+
 NEG_INF = -1e30
 
 
@@ -134,7 +139,7 @@ def flash_attention_fwd(q, k, v, window=None, *, causal=True, softcap=0.0,
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

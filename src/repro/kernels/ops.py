@@ -19,7 +19,22 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref as _ref
+
+def tpu_compiler_params(**kwargs):
+    """Version-compat shim for the Pallas-TPU compiler-params class.
+
+    jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+    resolve whichever this jax provides.  Kernels import this lazily
+    (inside the kernel entry point) so the ops<->kernel module cycle
+    stays one-directional at import time.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
+
+from repro.kernels import ref as _ref  # noqa: E402
 from repro.kernels.flash_attention import flash_attention_fwd as _fa_pallas
 from repro.kernels.moe_gmm import moe_gmm as _gmm_pallas
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_pallas

@@ -19,6 +19,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _compiler_params(**kw):
+    from repro.kernels.ops import tpu_compiler_params  # lazy: avoid cycle
+    return tpu_compiler_params(**kw)
+
+
 def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_ref,
                 *, chunk):
     ci = pl.program_id(2)
@@ -90,7 +95,7 @@ def ssd_scan(x, dt, A, B, C, *, chunk=128, interpret=False):
                                lambda b_, h_, ci: (b_, ci, h_, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(A.astype(jnp.float32), x, dt, B, C)

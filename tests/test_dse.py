@@ -1,0 +1,254 @@
+"""Tests for the batched DSE engine (repro.dse).
+
+The contract under test: ``batched_simulate`` must reproduce the scalar
+oracle ``core.simulator.simulate`` element-wise — same feasibility mask,
+step times within 1e-9 relative — over >=1000 sampled design points,
+plus Pareto / allocation / driver invariants.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.mcm import mcm_from_compute
+from repro.core.network import allocate_links
+from repro.core.simulator import simulate
+from repro.core.traffic import PARALLELISMS
+from repro.core.workload import Workload, paper_workload
+from repro.dse.batched_sim import (MCMBatch, allocate_links_batch,
+                                   batched_simulate)
+from repro.dse.pareto import (crowding_distance, nondominated_sort,
+                              pareto_mask)
+from repro.dse.search import (BatchedEvaluator, search_exhaustive,
+                              search_nsga2, search_prf_ucb, search_random,
+                              sweep_design_space)
+from repro.dse.space import (DesignSpace, P_IDX, StrategyBatch,
+                             enumerate_strategy_batch)
+
+W = paper_workload(global_batch=512)
+TINY = Workload(model=get_config("tinyllama_1_1b"), seq_len=4096,
+                global_batch=256)
+
+
+def _assert_parity(w, batch, mcm, fabric, reuse, hw=None):
+    res = batched_simulate(w, batch, mcm, fabric=fabric, reuse=reuse, hw=hw)
+    n_checked = 0
+    for i, s in enumerate(batch.to_strategies()):
+        r = simulate(w, s, mcm, fabric=fabric, topo=None, reuse=reuse,
+                     hw=hw)
+        assert r.feasible == bool(res.feasible[i]), (s, r.reason)
+        if r.feasible:
+            assert res.step_time[i] == pytest.approx(r.step_time, rel=1e-9)
+            assert res.throughput[i] == pytest.approx(r.throughput,
+                                                      rel=1e-9)
+        n_checked += 1
+    return n_checked
+
+
+# ---------------------------------------------------------------------------
+# Enumeration
+# ---------------------------------------------------------------------------
+def test_enumeration_matches_scalar():
+    from repro.core.optimizer import enumerate_strategies
+    for w, c in ((W, 4e6), (TINY, 1e6)):
+        mcm = mcm_from_compute(c, dies_per_mcm=16, m=6)
+        scal = {(s.tp, s.dp, s.pp, s.cp, s.ep, s.n_micro)
+                for s in enumerate_strategies(w, mcm)}
+        batch = enumerate_strategy_batch(w, mcm)
+        soa = set(batch.keys())
+        assert soa == scal and len(batch) == len(scal)
+
+
+# ---------------------------------------------------------------------------
+# Element-wise parity vs the scalar oracle (>= 1000 points total)
+# ---------------------------------------------------------------------------
+def test_parity_paper_workload_all_fabrics():
+    mcm = mcm_from_compute(4e6, dies_per_mcm=16, m=6)
+    batch = enumerate_strategy_batch(W, mcm)
+    n = 0
+    for fabric in ("oi", "ib", "nvlink"):
+        n += _assert_parity(W, batch, mcm, fabric, reuse=True)
+    n += _assert_parity(W, batch, mcm, "oi", reuse=False)
+    assert n >= 1000          # the acceptance floor, on this test alone
+
+
+def test_parity_includes_infeasible_and_invalid_points():
+    rng = np.random.default_rng(3)
+    mcm = mcm_from_compute(1e6, dies_per_mcm=16, m=2)   # tight HBM
+    vals = np.array([1, 2, 4, 8, 16, 32, 64])
+    batch = StrategyBatch(*(rng.choice(vals, 80) for _ in range(5)),
+                          rng.choice([1, 2, 8, 32], 80))
+    res = batched_simulate(W, batch, mcm)
+    assert not res.feasible.all()            # invalid products / HBM
+    _assert_parity(W, batch, mcm, "oi", reuse=True)
+
+
+def test_parity_reuse_paper_mode_and_gemm_eff():
+    mcm = mcm_from_compute(16e6, dies_per_mcm=16, m=8)
+    hw_p = dataclasses.replace(mcm.hw, ocs_reuse_mode="paper")
+    batch = enumerate_strategy_batch(W, mcm)
+    sub = batch.take(np.arange(len(batch))[:: max(len(batch) // 80, 1)])
+    _assert_parity(W, sub, mcm, "oi", reuse=True, hw=hw_p)
+    hw_g = dataclasses.replace(mcm.hw, model_gemm_eff=True)
+    _assert_parity(W, sub, mcm, "oi", reuse=True, hw=hw_g)
+
+
+def test_parity_moe_free_and_fused_mcm_batch():
+    space = DesignSpace.from_compute(TINY, 1e6, fabrics=("oi",),
+                                     m=(2, 6), cpo_ratio=(0.3, 0.9))
+    cells = list(space.batches())
+    batch = StrategyBatch.concat([g for _, _, g in cells])
+    local = np.concatenate([np.full(len(g), i, np.int64)
+                            for i, (_, _, g) in enumerate(cells)])
+    mcms = [m for m, _, _ in cells]
+    res = batched_simulate(TINY, batch, MCMBatch.from_mcms(mcms, local),
+                           fabric="oi", reuse=True, hw=mcms[0].hw)
+    for i, s in enumerate(batch.to_strategies()):
+        r = simulate(TINY, s, mcms[local[i]], fabric="oi", topo=None)
+        assert r.feasible == bool(res.feasible[i])
+        if r.feasible:
+            assert res.step_time[i] == pytest.approx(r.step_time, rel=1e-9)
+
+
+def test_jax_backend_matches_numpy():
+    mcm = mcm_from_compute(2e6, dies_per_mcm=16, m=6)
+    batch = enumerate_strategy_batch(W, mcm)
+    rn = batched_simulate(W, batch, mcm, backend="numpy")
+    rj = batched_simulate(W, batch, mcm, backend="jax")
+    assert np.array_equal(rn.feasible, rj.feasible)
+    ok = rn.feasible
+    np.testing.assert_allclose(rj.step_time[ok], rn.step_time[ok],
+                               rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Link allocation
+# ---------------------------------------------------------------------------
+def test_allocate_links_batch_matches_scalar():
+    rng = np.random.default_rng(7)
+    B = 300
+    vols = rng.uniform(1e6, 1e12, size=(B, 5))
+    mask = rng.random((B, 5)) < 0.7
+    vols = np.where(mask, vols, 0.0)
+    pair_choices = [(-1, -1), (P_IDX["CP"], P_IDX["EP"]),
+                    (P_IDX["CP"], P_IDX["DP"]), (P_IDX["EP"], P_IDX["DP"])]
+    picks = rng.integers(len(pair_choices), size=B)
+    pa = np.array([pair_choices[p][0] for p in picks])
+    pb = np.array([pair_choices[p][1] for p in picks])
+    # a pair only counts when both members carry inter traffic
+    valid = (pa >= 0) & mask[np.arange(B), np.maximum(pa, 0)] \
+        & mask[np.arange(B), np.maximum(pb, 0)]
+    pa, pb = np.where(valid, pa, -1), np.where(valid, pb, -1)
+    for L in (3, 17, 96):
+        got = allocate_links_batch(vols, mask, L, pa, pb)
+        for i in range(B):
+            d = {p: vols[i, P_IDX[p]] for p in PARALLELISMS
+                 if mask[i, P_IDX[p]]}
+            rp = None
+            if pa[i] >= 0:
+                rp = (PARALLELISMS[pa[i]], PARALLELISMS[pb[i]])
+            want = allocate_links(d, L, rp)
+            for p, v in want.items():
+                assert got[i, P_IDX[p]] == v, (i, L, d, rp, want)
+
+
+def test_allocate_links_reuse_respects_budget():
+    # the fixed trim: l_reuse + others (pair counted once) <= L
+    vols = {"CP": 5e9, "EP": 9e9, "DP": 4e9, "PP": 1e3}
+    for L in (3, 4, 5, 8, 64):
+        alloc = allocate_links(vols, L, ("CP", "EP"))
+        used = alloc["CP"] + alloc["DP"] + alloc["PP"]
+        assert used <= L or max(alloc.values()) <= 1
+        assert alloc["CP"] == alloc["EP"]
+
+
+# ---------------------------------------------------------------------------
+# Pareto invariants
+# ---------------------------------------------------------------------------
+def test_pareto_mask_no_dominated_survivor():
+    rng = np.random.default_rng(0)
+    obj = rng.normal(size=(400, 3))
+    obj[50:60] = obj[40:50]                  # duplicates must survive
+    maximize = [True, False, True]
+    keep = pareto_mask(obj, maximize)
+    sign = np.where(maximize, 1.0, -1.0)
+    M = obj * sign
+    for i in np.nonzero(keep)[0]:
+        dom = (M >= M[i]).all(1) & (M > M[i]).any(1)
+        assert not dom.any()
+    # and every removed point IS dominated by someone
+    for i in np.nonzero(~keep)[0]:
+        dom = (M >= M[i]).all(1) & (M > M[i]).any(1)
+        assert dom.any()
+
+
+def test_nondominated_sort_fronts_are_clean():
+    rng = np.random.default_rng(1)
+    obj = rng.normal(size=(200, 2))
+    maximize = [True, True]
+    ranks = nondominated_sort(obj, maximize)
+    assert (ranks[pareto_mask(obj, maximize)] == 0).all()
+    for r in range(int(ranks.max()) + 1):
+        sel = ranks >= r
+        front = pareto_mask(obj[sel], maximize)
+        assert (ranks[np.nonzero(sel)[0][front]] == r).all()
+    d = crowding_distance(obj[ranks == 0], maximize)
+    assert np.isinf(d).sum() >= 2            # boundary points
+
+
+def test_sweep_pareto_and_best():
+    space = DesignSpace.from_compute(TINY, 1e6, fabrics=("oi", "ib"),
+                                     m=(2, 6, 8), cpo_ratio=(0.6,))
+    sweep = sweep_design_space(space)
+    assert len(sweep) > 500
+    pi = sweep.pareto_indices()
+    assert len(pi) > 0
+    best = sweep.best
+    t, c, p = (sweep.metrics["throughput"], sweep.metrics["cost"],
+               sweep.metrics["power"])
+    feas = np.nonzero(sweep.metrics["feasible"])[0]
+    for i in pi:
+        dom = (t[feas] >= t[i]) & (c[feas] <= c[i]) & (p[feas] <= p[i]) \
+            & ((t[feas] > t[i]) | (c[feas] < c[i]) | (p[feas] < p[i]))
+        assert not dom.any()
+    assert best in pi                        # max-throughput is on the front
+
+
+# ---------------------------------------------------------------------------
+# Drivers + cache
+# ---------------------------------------------------------------------------
+def test_drivers_and_cache():
+    mcm = mcm_from_compute(2e6, dies_per_mcm=16, m=6)
+    full = search_exhaustive(BatchedEvaluator(W, mcm))
+    t_best = full.metrics["throughput"].max()
+    assert full.metrics["feasible"].any()
+
+    r = search_random(BatchedEvaluator(W, mcm), budget=60, seed=0)
+    assert r.n_sim <= 60
+    p = search_prf_ucb(BatchedEvaluator(W, mcm), budget=60, seed=0)
+    assert p.n_sim <= 60
+    assert p.metrics["throughput"].max() <= t_best + 1e-9
+    g = search_nsga2(BatchedEvaluator(W, mcm), pop_size=16, generations=4,
+                     seed=0)
+    assert g.metrics["throughput"].max() <= t_best + 1e-9
+    assert (g.batch.n_devices == mcm.n_devices).all()   # repair keeps grid
+
+    ev = BatchedEvaluator(W, mcm)
+    search_exhaustive(ev)
+    n = ev.n_sim
+    again = search_exhaustive(ev)
+    assert ev.n_sim == n and ev.n_hits >= len(again.batch)
+
+
+def test_inner_search_uses_batched_scan():
+    from repro.core.optimizer import inner_search
+    mcm = mcm_from_compute(2e6, dies_per_mcm=16, m=6)
+    best, pts = inner_search(W, mcm, budget=16)
+    assert best is not None and len(pts) <= 16
+    # the refined best must be the throughput argmax of its pool
+    assert best.throughput == max(p.throughput for p in pts)
+    # and must sit at the top of the batched ranking of the full grid
+    ev = BatchedEvaluator(W, mcm)
+    full = search_exhaustive(ev)
+    assert best.throughput >= 0.95 * full.metrics["throughput"].max()
