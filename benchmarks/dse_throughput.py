@@ -4,7 +4,10 @@ Measures the hot path this repo optimizes: design-point evaluation.
 Compares the batched engine (``repro.dse.batched_sim`` / the fused
 cross-variant sweep) against the scalar ``core.simulator.simulate``
 loop on the SAME points, and records design-points/sec so the perf
-trajectory of this path is tracked across PRs.
+trajectory of this path is tracked across PRs.  The design space comes
+from a ``repro.api.Scenario`` (the same spec the CLI runs), and the
+full ``Study.run()`` end-to-end time (sweep + scalar refinement +
+record assembly) is tracked alongside the raw kernel time.
 
     PYTHONPATH=src:. python benchmarks/dse_throughput.py
 """
@@ -17,11 +20,10 @@ from pathlib import Path
 import numpy as np
 
 from benchmarks.common import emit
-from repro.configs import get_config
+from repro.api import Scenario, Study
 from repro.core.simulator import simulate
-from repro.core.workload import Workload
 from repro.dse.batched_sim import MCMBatch, batched_simulate
-from repro.dse.space import DesignSpace, StrategyBatch
+from repro.dse.space import StrategyBatch
 
 OUT = Path(__file__).resolve().parents[1] / "BENCH_dse.json"
 
@@ -38,9 +40,10 @@ def _fused_inputs(space):
 def bench_model(name: str, seq_len: int, global_batch: int,
                 C: float = 4e6, scalar_cap: int = 4000,
                 repeats: int = 5) -> dict:
-    w = Workload(model=get_config(name), seq_len=seq_len,
-                 global_batch=global_batch)
-    space = DesignSpace.from_compute(w, C, fabrics=("oi",))
+    sc = Scenario(model=name, total_tflops=C, seq_len=seq_len,
+                  global_batch=global_batch, fabrics=("oi",))
+    w = sc.build_workload()
+    space = sc.design_space()
     batch, mb, mcms, local = _fused_inputs(space)
     n = len(batch)
 
@@ -49,6 +52,10 @@ def bench_model(name: str, seq_len: int, global_batch: int,
     t_batched = min(_timed(lambda: batched_simulate(
         w, batch, mb, fabric="oi", reuse=True, hw=mcms[0].hw))
         for _ in range(repeats))
+
+    # full api path: sweep + scalar refinement + StudyResult assembly
+    study = Study(sc)
+    t_study = min(_timed(study.run) for _ in range(repeats))
 
     # scalar oracle loop over the same points (capped + extrapolated
     # when the grid is huge — the per-point cost is flat)
@@ -65,10 +72,12 @@ def bench_model(name: str, seq_len: int, global_batch: int,
         "model": name, "C_tflops": C, "design_points": int(n),
         "mcm_variants": len(mcms),
         "batched_s": t_batched, "scalar_s": t_scalar,
+        "study_s": t_study,
         "scalar_sampled": int(len(idx)),
         "speedup": t_scalar / t_batched,
         "points_per_s_batched": n / t_batched,
         "points_per_s_scalar": n / t_scalar,
+        "points_per_s_study": n / t_study,
     }
 
 
@@ -85,11 +94,12 @@ def run() -> dict:
         bench_model("mixtral_8x7b", 8192, 256),
     ]
     rows = [[r["model"], r["design_points"], f"{r['batched_s'] * 1e3:.2f}",
-             f"{r['scalar_s'] * 1e3:.1f}", f"{r['speedup']:.0f}",
-             f"{r['points_per_s_batched']:.0f}"] for r in results]
+             f"{r['study_s'] * 1e3:.1f}", f"{r['scalar_s'] * 1e3:.1f}",
+             f"{r['speedup']:.0f}", f"{r['points_per_s_batched']:.0f}"]
+            for r in results]
     emit("dse_throughput", rows,
-         ["model", "points", "batched_ms", "scalar_ms", "speedup",
-          "points_per_s"])
+         ["model", "points", "batched_ms", "study_ms", "scalar_ms",
+          "speedup", "points_per_s"])
     payload = {"bench": "dse_throughput", "results": results,
                "min_speedup": min(r["speedup"] for r in results)}
     OUT.write_text(json.dumps(payload, indent=2))

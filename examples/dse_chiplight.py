@@ -1,22 +1,18 @@
 """Full cross-layer DSE study: Pareto frontier + cluster comparison.
 
-Reproduces the paper's workflow end-to-end: profile traffic -> co-optimise
-MCM/parallelism/topology -> compare against GPU, Chiplet+IB and RailX at
-one compute point, then emit the performance-cost Pareto frontier.  All
-strategy scans run through the vectorized ``repro.dse`` engine (the
-scalar simulator is only used to refine winners); the grid sweep at the
-top shows the full (strategy x MCM x fabric) design space the batched
-engine covers in one shot.
+Reproduces the paper's workflow end-to-end through the unified
+``repro.api`` surface: one Scenario per cluster configuration, one
+``Study.run()`` each — batched grid sweep, nested ChipLight
+optimisation, then GPU / Chiplet+IB / RailX baselines as scenario
+variants of the SAME spec (that is the point: a baseline is a field
+change, not another code path).
 
     PYTHONPATH=src python examples/dse_chiplight.py --C 4e6
 """
 import argparse
 
-from repro.core import (chiplight_optimize, inner_search,
-                        mcm_from_compute, traffic_volumes)
-from repro.core.optimizer import railx_search
-from repro.core.workload import paper_workload
-from repro.dse import DesignSpace, sweep_design_space
+from repro.api import Scenario, Study
+from repro.core import traffic_volumes
 
 
 def main():
@@ -26,49 +22,61 @@ def main():
     ap.add_argument("--budget", type=int, default=40)
     args = ap.parse_args()
 
-    w = paper_workload(global_batch=512)
-    t = lambda p: p.throughput if p else 0.0
+    base = Scenario(model="qwen3_moe_235b_a22b", total_tflops=args.C,
+                    seq_len=10240, global_batch=512)
+    t = lambda r: r.best_record.throughput if r.best is not None else 0.0
 
-    print("=== batched grid sweep (repro.dse) ===")
-    space = DesignSpace.from_compute(w, args.C, fabrics=("oi", "ib"))
-    sweep = sweep_design_space(space)
-    rate = sweep.n_sim / max(sweep.elapsed_s, 1e-9)
-    print(f"  {sweep.n_sim} design points "
-          f"({len(space.mcms)} MCM variants x fabrics x strategies) "
-          f"in {sweep.elapsed_s:.2f}s — {rate:,.0f} points/s")
+    print("=== batched grid sweep (repro.dse via repro.api) ===")
+    sweep = Study(base.replace(fabrics=("oi", "ib"), refine_top=0,
+                               name="grid_sweep")).run()
+    n = sweep.provenance["grid_evaluated"]
+    rate = n / max(sweep.timings["sweep_s"], 1e-9)
+    print(f"  {n} design points (strategies x MCM variants x fabrics) "
+          f"in {sweep.timings['sweep_s']:.2f}s — {rate:,.0f} points/s")
     if sweep.best is not None:
-        d = sweep.describe(sweep.best)
-        print(f"  grid best: {d['throughput_tok_s']:.3e} tok/s "
-              f"{d['fabric']} m={d['mcm']['m']} {d['strategy']}")
+        d = sweep.best_record
+        print(f"  grid best: {d.throughput:.3e} tok/s "
+              f"{d.fabric} m={d.mcm['m']} {d.strategy}")
         print(f"  pareto surface (thpt/cost/power): "
-              f"{len(sweep.pareto_indices())} points")
+              f"{len(sweep.pareto)} points")
 
-    print(f"\n=== traffic projection (network-independent) ===")
-    res = chiplight_optimize(w, args.C, dies_per_mcm=16, m0=6,
-                             outer_iters=5, inner_budget=args.budget)
-    best = res.best
-    vols = traffic_volumes(w, best.strategy)
+    print("\n=== nested ChipLight optimisation ===")
+    chip = Study(base.replace(
+        driver="chiplight-outer", dies_per_mcm=(16,), m=(6,),
+        cpo_ratio=(0.6,), name="chiplight",
+        driver_kw={"outer_iters": 5, "inner_budget": args.budget})).run()
+    best = chip.best_point
+
+    print("\n=== traffic projection (network-independent) ===")
+    vols = traffic_volumes(base.build_workload(), best.strategy)
     for p, v in sorted(vols.items(), key=lambda kv: -kv[1]):
         print(f"  {p}: {v / 1e9:8.1f} GB/device/step")
 
     print(f"\n=== cluster comparison at C={args.C:.0e} TFLOPS ===")
-    gpu = mcm_from_compute(args.C, dies_per_mcm=8, m=6)
-    bg, _ = inner_search(w, gpu, fabric="nvlink", budget=args.budget)
-    chip = mcm_from_compute(args.C, dies_per_mcm=16, m=6)
-    bi, _ = inner_search(w, chip, fabric="ib", budget=args.budget)
-    br, _ = railx_search(w, best.mcm, reuse=True, budget=args.budget)
-    print(f"  GPU (NVLink+IB):  {t(bg):.3e} tok/s")
-    print(f"  Chiplet+IB:       {t(bi):.3e} tok/s")
-    print(f"  RailX:            {t(br):.3e} tok/s")
-    print(f"  ChipLight:        {t(best):.3e} tok/s  "
-          f"({t(best) / max(t(bg), 1):.2f}x over GPU)")
+    budget_kw = {"refine_top": args.budget, "keep_top": args.budget}
+    gpu = Study(base.replace(fabrics=("nvlink",), dies_per_mcm=(8,),
+                             m=(6,), cpo_ratio=(0.6,), name="gpu",
+                             **budget_kw)).run()
+    ib = Study(base.replace(fabrics=("ib",), dies_per_mcm=(16,), m=(6,),
+                            cpo_ratio=(0.6,), name="chiplet_ib",
+                            **budget_kw)).run()
+    railx = Study(base.replace(
+        driver="railx", dies_per_mcm=(best.mcm.dies_per_mcm,),
+        m=(best.mcm.m,), cpo_ratio=(best.mcm.cpo_ratio,), name="railx",
+        driver_kw={"budget": args.budget})).run()
+    print(f"  GPU (NVLink+IB):  {t(gpu):.3e} tok/s")
+    print(f"  Chiplet+IB:       {t(ib):.3e} tok/s")
+    print(f"  RailX:            {t(railx):.3e} tok/s")
+    print(f"  ChipLight:        {t(chip):.3e} tok/s  "
+          f"({t(chip) / max(t(gpu), 1):.2f}x over GPU)")
 
     print(f"\n=== performance-cost Pareto frontier "
-          f"({len(res.frontier)} points) ===")
-    for p in res.frontier:
-        print(f"  ${p.cost / 1e6:7.1f}M  {p.throughput:.3e} tok/s  "
-              f"m={p.mcm.m} r={p.mcm.cpo_ratio:.1f} "
-              f"{p.strategy.asdict()}")
+          f"({len(chip.pareto)} points) ===")
+    for i in chip.pareto:
+        r = chip.records[i]
+        print(f"  ${r.metrics['cost'] / 1e6:7.1f}M  "
+              f"{r.throughput:.3e} tok/s  "
+              f"m={r.mcm['m']} r={r.mcm['cpo_ratio']:.1f} {r.strategy}")
 
 
 if __name__ == "__main__":

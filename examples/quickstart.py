@@ -1,26 +1,30 @@
-"""Quickstart: the ChipLight DSE in ~30 lines.
+"""Quickstart: one Scenario, one Study.run() — the ChipLight DSE in ~30
+lines.
 
-Optimises a 1e6-TFLOPS chiplet+OI cluster for Qwen3-235B training and
-prints the chosen MCM architecture, parallel strategy, OI topology and
-the JAX deployment plan.
+Optimises a 1e6-TFLOPS chiplet+OI cluster for Qwen3-235B training via the
+unified ``repro.api`` surface and prints the chosen MCM architecture,
+parallel strategy, OI topology and the JAX deployment plan.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import chiplight_optimize, cluster_cost
-from repro.core.workload import paper_workload
+from repro.api import Scenario, Study
 from repro.parallel.plan import plan_from_design
 
-w = paper_workload(global_batch=512)
+sc = Scenario(model="qwen3_moe_235b_a22b", total_tflops=1e6,
+              seq_len=10240, global_batch=512, driver="chiplight-outer",
+              dies_per_mcm=(16,), m=(6,), cpo_ratio=(0.6,),
+              driver_kw={"outer_iters": 4, "inner_budget": 32})
+w = sc.build_workload()
 print(f"workload: {w.model.name}, ctx={w.seq_len}, "
       f"{w.tokens_per_step / 1e6:.1f}M tokens/step, "
       f"{w.total_params / 1e9:.0f}B params ({w.active_params / 1e9:.0f}B "
       f"active)")
 
-res = chiplight_optimize(w, total_tflops=1e6, dies_per_mcm=16, m0=6,
-                         outer_iters=4, inner_budget=32)
-best = res.best
-print(f"\nbest design point ({len(res.history)} evaluated, "
-      f"{len(res.frontier)} on the Pareto front):")
+res = Study(sc).run()
+best = res.best_point            # scalar-oracle DesignPoint, topology incl.
+rec = res.best_record
+print(f"\nbest design point ({res.provenance['n_evaluated']} evaluated, "
+      f"{len(res.pareto)} on the Pareto front):")
 print(f"  MCM: {best.mcm.n_mcm} packages of {best.mcm.x}x{best.mcm.y} "
       f"dies, m={best.mcm.m} HBM/die, CPO ratio {best.mcm.cpo_ratio:.1f} "
       f"-> {best.mcm.total_links} optical links each")
@@ -33,13 +37,18 @@ if best.topo and best.topo.dims:
           f"({best.topo.ocs_count()} OCS)")
 print(f"  throughput: {best.throughput:.3e} tokens/s  "
       f"MFU {best.sim.mfu:.2f}  bottleneck: {best.sim.bottleneck}")
-print(f"  cluster cost: ${best.cost / 1e6:.1f}M")
+print(f"  cluster cost: ${rec.metrics['cost'] / 1e6:.1f}M  "
+      f"board power: {rec.metrics['power'] / 1e6:.2f}MW")
 
 plan = plan_from_design(best)
 print(f"\nJAX deployment plan: mesh {plan.mesh_shape()} "
       f"(TP->model, DP*CP*EP->data), pp={plan.pp}, n_micro={plan.n_micro}")
 
 print("\nouter-search trace (heuristic planner moves):")
-for t in res.outer_trace:
+for t in res.traces:
     print(f"  iter {t['iter']}: mcm(n,x,y,m,r)={t['mcm']} "
           f"thpt={t['best_thpt']:.2e} bottleneck={t['bottleneck']}")
+
+path = res.save("artifacts/studies/quickstart.json")
+print(f"\nstudy artifact: {path} "
+      f"(scenario hash {res.provenance['scenario_hash']})")

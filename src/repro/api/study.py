@@ -1,0 +1,200 @@
+"""``Study`` — one ``run()`` over any engine, from a ``Scenario``.
+
+Dispatch goes through the driver registry: batched drivers (exhaustive /
+random / prf / nsga2) take the scan-then-refine path — the vectorized
+``repro.dse`` sweep ranks the whole grid, then the scalar oracle derives
+exact topologies and OCS-inclusive costs for the top points — while
+``chiplight-outer`` and ``railx`` wrap the nested optimiser and the RailX
+baseline.  Every path produces the same ``StudyResult``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+from repro.api.registry import DRIVERS, OBJECTIVES
+from repro.api.result import (StudyResult, record_from_point,
+                              record_from_sweep)
+from repro.api.scenario import Scenario
+
+
+@dataclass(frozen=True)
+class Study:
+    """A scenario bound to its runner; ``Study(sc).run()`` is the single
+    entrypoint every example, benchmark and CLI flow goes through."""
+
+    scenario: Scenario
+
+    def run(self) -> StudyResult:
+        return DRIVERS.get(self.scenario.driver)(self.scenario)
+
+
+def run(scenario: Scenario) -> StudyResult:
+    """Module-level convenience: ``repro.api.run(scenario)``."""
+    return Study(scenario).run()
+
+
+# ---------------------------------------------------------------------------
+# Batched drivers: vectorized sweep -> scalar refinement
+# ---------------------------------------------------------------------------
+def _sweep_keep_indices(sweep, sc: Scenario) -> np.ndarray:
+    """Feasible rows worth keeping: top-``keep_top`` by throughput plus
+    the full Pareto set under the scenario objectives (0 = keep all)."""
+    from repro.dse.pareto import pareto_mask
+    feas = np.nonzero(sweep.metrics["feasible"])[0]
+    order = feas[np.argsort(-sweep.metrics["throughput"][feas],
+                            kind="stable")]
+    if sc.keep_top == 0 or len(order) <= sc.keep_top:
+        return order
+    objs = [OBJECTIVES.get(n) for n in sc.objectives]
+    cols = np.stack([np.asarray(sweep.metrics[o.metric], np.float64)
+                     for o in objs], 1)
+    cols = np.where(sweep.metrics["feasible"][:, None], cols, np.nan)
+    par = np.nonzero(pareto_mask(cols, [o.maximize for o in objs]))[0]
+    keep = list(order[: sc.keep_top])
+    keep += [int(i) for i in par if i not in set(keep)]
+    return np.array(keep, np.int64)
+
+
+def _batched_driver_kw(sc: Scenario, driver: str) -> dict:
+    """Translate generic knobs to the driver's signature (``budget`` ->
+    ``pop_size`` for nsga2, as the legacy CLI did) and reject anything
+    the driver cannot accept with one clear error."""
+    import inspect
+    from repro.dse.search import DRIVERS as DSE_DRIVERS
+    kw = dict(sc.driver_kw)
+    if driver == "exhaustive":          # full grid: budgets are moot
+        kw.pop("budget", None)
+        kw.pop("generations", None)
+    elif driver in ("random", "prf"):
+        kw.pop("generations", None)
+        kw.setdefault("budget", 256)
+    elif driver == "nsga2" and "budget" in kw:
+        kw.setdefault("pop_size", min(kw.pop("budget"), 64))
+    allowed = {p for p in inspect.signature(DSE_DRIVERS[driver]).parameters
+               if p not in ("ev", "grid")}
+    bad = sorted(set(kw) - allowed - {"seed"})
+    if bad:
+        raise ValueError(f"driver {driver!r} does not accept driver_kw "
+                         f"{bad}; accepted: {sorted(allowed)}")
+    return kw
+
+
+def _run_batched(sc: Scenario, driver: str) -> StudyResult:
+    from repro.dse.search import refine_top_points, sweep_design_space
+    t0 = time.perf_counter()
+    space = sc.design_space()
+    kw = _batched_driver_kw(sc, driver)
+    sweep = sweep_design_space(space, driver=driver, backend=sc.backend,
+                               seed=sc.seed, **kw)
+    kept = _sweep_keep_indices(sweep, sc)
+    records = [record_from_sweep(sweep, int(i)) for i in kept]
+    t1 = time.perf_counter()
+    points = []
+    if sc.refine_top and len(kept):
+        points = refine_top_points(sweep, top_k=sc.refine_top)
+    records += [record_from_point(p) for p in points]
+    t2 = time.perf_counter()
+
+    best: Optional[int] = None
+    if points:                       # refined best-first (exact costs)
+        best = len(records) - len(points)
+    elif records:
+        best = 0                     # kept rows are throughput-sorted
+    result = StudyResult(
+        scenario=sc, records=records, best=best, points=points,
+        traces=[],
+        timings={"sweep_s": sweep.elapsed_s,
+                 "refine_s": t2 - t1, "total_s": t2 - t0},
+        provenance=_provenance(sc, engine=f"dse.sweep[{driver}]+refine",
+                               grid_evaluated=len(sweep),
+                               n_sim=int(sweep.n_sim),
+                               n_cache_hits=int(sweep.n_cache_hits),
+                               n_feasible=int(sweep.metrics["feasible"]
+                                              .sum()),
+                               n_kept=len(kept), n_refined=len(points)))
+    result.pareto = result.pareto_indices()
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Scalar drivers: nested ChipLight optimiser / RailX baseline
+# ---------------------------------------------------------------------------
+def _scalar_result(sc: Scenario, pts: List, traces, engine: str,
+                   elapsed: float, **extra_prov) -> StudyResult:
+    # the outer search revisits MCM variants, re-evaluating identical
+    # design points — keep one record per (strategy, mcm, fabric)
+    n_raw = len(pts)
+    seen, unique = set(), []
+    for p in pts:
+        s = p.strategy
+        key = (s.tp, s.dp, s.pp, s.cp, s.ep, s.n_micro, p.mcm.n_mcm,
+               p.mcm.x, p.mcm.y, p.mcm.m, p.mcm.cpo_ratio, p.fabric)
+        if key not in seen:
+            seen.add(key)
+            unique.append(p)
+    pts = sorted(unique, key=lambda p: -p.throughput)
+    kept = pts if sc.keep_top == 0 else pts[: sc.keep_top]
+    records = [record_from_point(p, source="scalar") for p in kept]
+    result = StudyResult(
+        scenario=sc, records=records, best=0 if records else None,
+        points=kept, traces=list(traces),
+        timings={"total_s": elapsed},
+        provenance=_provenance(sc, engine=engine, n_evaluated=n_raw,
+                               n_unique=len(pts), n_kept=len(kept),
+                               **extra_prov))
+    result.pareto = result.pareto_indices()
+    return result
+
+
+def _require_single_cell(sc: Scenario):
+    """Scalar drivers explore FROM one MCM start point (the outer search
+    moves m/cpo itself); a multi-valued grid would be silently dropped,
+    so reject it instead."""
+    multi = [ax for ax in ("dies_per_mcm", "m", "cpo_ratio", "fabrics")
+             if len(getattr(sc, ax)) > 1]
+    if multi:
+        raise ValueError(
+            f"driver {sc.driver!r} starts from a single MCM cell; give "
+            f"one value per axis (got multiple for {multi})")
+
+
+def _run_outer(sc: Scenario) -> StudyResult:
+    from repro.core.optimizer import chiplight_optimize
+    _require_single_cell(sc)
+    kw = dict(sc.driver_kw)
+    t0 = time.perf_counter()
+    res = chiplight_optimize(
+        sc.build_workload(), sc.total_tflops,
+        dies_per_mcm=sc.dies_per_mcm[0], m0=sc.m[0],
+        cpo0=sc.cpo_ratio[0],
+        outer_iters=kw.get("outer_iters", 8),
+        inner_budget=kw.get("inner_budget", 48),
+        fabric=sc.fabrics[0], reuse=sc.reuse, hw=sc.build_hw(),
+        seed=sc.seed)
+    return _scalar_result(sc, res.history, res.outer_trace,
+                          "core.chiplight_optimize",
+                          time.perf_counter() - t0)
+
+
+def _run_railx(sc: Scenario) -> StudyResult:
+    from repro.core.mcm import mcm_from_compute
+    from repro.core.optimizer import railx_search
+    _require_single_cell(sc)
+    kw = dict(sc.driver_kw)
+    t0 = time.perf_counter()
+    mcm = mcm_from_compute(sc.total_tflops, sc.dies_per_mcm[0], sc.m[0],
+                           cpo_ratio=sc.cpo_ratio[0], hw=sc.build_hw())
+    _, pts = railx_search(sc.build_workload(), mcm, reuse=sc.reuse,
+                          budget=kw.get("budget", 64), hw=sc.build_hw(),
+                          seed=sc.seed)
+    return _scalar_result(sc, pts, [], "core.railx_search",
+                          time.perf_counter() - t0)
+
+
+def _provenance(sc: Scenario, **kw) -> dict:
+    return {"scenario_hash": sc.scenario_hash(), "driver": sc.driver,
+            "model": sc.model, **kw}

@@ -100,6 +100,7 @@ class DesignPoint:
     topo: Optional[OITopology]
     sim: SimResult
     cost: float
+    fabric: str = "oi"
 
     @property
     def throughput(self) -> float:
@@ -138,7 +139,8 @@ def evaluate_point(w: Workload, s: Strategy, mcm: MCMArch,
     if not sim.feasible:
         return None
     cost = cluster_cost(mcm, topo, fabric=fabric, hw=hw).total
-    return DesignPoint(strategy=s, mcm=mcm, topo=topo, sim=sim, cost=cost)
+    return DesignPoint(strategy=s, mcm=mcm, topo=topo, sim=sim, cost=cost,
+                       fabric=fabric)
 
 
 # ---------------------------------------------------------------------------
@@ -263,15 +265,24 @@ def chiplight_optimize(w: Workload, total_tflops: float,
                        dies_per_mcm: int = 16, m0: int = 6,
                        outer_iters: int = 8, inner_budget: int = 48,
                        fabric: str = "oi", reuse: bool = True,
-                       hw: HW = DEFAULT_HW, seed: int = 0) -> DSEResult:
+                       hw: HW = DEFAULT_HW, seed: int = 0,
+                       cpo0: float = 0.6) -> DSEResult:
+    """Nested outer/inner optimisation (paper §IV-B).
+
+    One ``np.random.default_rng(seed)`` drives every ``propose_mcm``
+    move (the inner scan is deterministic), so the whole run is
+    reproducible from ``(w, total_tflops, ..., seed)`` alone.  The MCM
+    proposed by the LAST planner move is evaluated too — ``outer_trace``
+    has ``outer_iters + 1`` entries, one per inner search.
+    """
     rng = np.random.default_rng(seed)
-    mcm = mcm_from_compute(total_tflops, dies_per_mcm, m0, hw=hw)
+    mcm = mcm_from_compute(total_tflops, dies_per_mcm, m0,
+                           cpo_ratio=cpo0, hw=hw)
     all_pts: List[DesignPoint] = []
     trace = []
-    for it in range(outer_iters):
+    for it in range(outer_iters + 1):
         best, pts = inner_search(w, mcm, fabric=fabric, reuse=reuse,
-                                 budget=inner_budget, hw=hw,
-                                 seed=seed + it)
+                                 budget=inner_budget, hw=hw)
         all_pts.extend(pts)
         trace.append({
             "iter": it, "mcm": (mcm.n_mcm, mcm.x, mcm.y, mcm.m,
@@ -279,7 +290,8 @@ def chiplight_optimize(w: Workload, total_tflops: float,
             "best_thpt": best.throughput if best else 0.0,
             "bottleneck": best.sim.bottleneck if best else "none",
         })
-        mcm = propose_mcm(mcm, best, rng)
+        if it < outer_iters:
+            mcm = propose_mcm(mcm, best, rng)
     best = max(all_pts, key=lambda p: p.throughput, default=None)
     return DSEResult(best=best, frontier=pareto_front(all_pts),
                      history=all_pts, outer_trace=trace)

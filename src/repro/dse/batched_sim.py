@@ -107,6 +107,18 @@ HBM_W_PER_STACK = 30.0
 OI_W_PER_LINK = 15.0        # CPO 400G port, both ends + laser
 NIC_W_PER_DEV = 25.0        # IB NIC (electrical fabrics)
 
+
+def board_power(mcm, fabric: str, util: float) -> float:
+    """Scalar board power for one MCMArch at the given compute
+    utilisation — the same model the batched path applies element-wise,
+    so refined (scalar-oracle) records stay comparable to sweep rows."""
+    n_dev = mcm.n_devices
+    power = n_dev * (DIE_IDLE_W + DIE_DYN_W * util) \
+        + n_dev * mcm.m * HBM_W_PER_STACK
+    if fabric == "oi":
+        return power + mcm.n_mcm * mcm.total_links * OI_W_PER_LINK
+    return power + n_dev * NIC_W_PER_DEV
+
 # infeasibility reason codes
 OK, BAD_DEVICES, UNMAPPABLE, HBM_CAPACITY = 0, 1, 2, 3
 REASONS = {OK: "", BAD_DEVICES: "strategy devices != cluster",

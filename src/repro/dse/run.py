@@ -1,118 +1,29 @@
-"""CLI for the batched DSE engine.
+"""DEPRECATED CLI shim — use ``python -m repro.cli`` instead.
 
-    PYTHONPATH=src python -m repro.dse.run --model qwen3_moe_235b_a22b \
-        --C 4e6 --fabrics oi,ib --driver exhaustive --top 5
-
-Sweeps the full (strategy x MCM-variant x fabric) grid at a cluster
-compute constant C, prints the best points + Pareto surface and writes a
-JSON artifact.  ``--model all`` sweeps every config in the model zoo.
+The old batched-DSE CLI (``python -m repro.dse.run --model ... --C ...``)
+is subsumed by the unified scenario CLI; every flag it accepted is still
+accepted there.  This shim keeps old invocations working: it emits a
+``DeprecationWarning`` and forwards the argv unchanged, so it produces
+exactly what ``repro.cli.main`` produces for the same argv.  One default
+changed with the new surface: scalar refinement of the top points is now
+ON by default (``--refine-top``, legacy ``--refine`` still maps to
+refining the top ``--top`` points); artifacts are per-study
+``StudyResult`` JSON instead of the old sweep list.
 """
 from __future__ import annotations
 
-import argparse
-import json
-from pathlib import Path
-
-import numpy as np
-
-from repro.core.workload import Workload
-from repro.dse.search import refine_top_points, sweep_design_space
-from repro.dse.space import DesignSpace
+import sys
+import warnings
 
 
-def _sweep_one(name: str, args) -> dict:
-    from repro.configs import get_config
-    cfg = get_config(name)
-    w = Workload(model=cfg, seq_len=args.seq_len,
-                 global_batch=args.global_batch)
-    space = DesignSpace.from_compute(
-        w, args.C, fabrics=tuple(args.fabrics.split(",")),
-        reuse=not args.no_reuse,
-        dies_per_mcm=tuple(int(x) for x in args.dies.split(",")),
-        m=tuple(int(x) for x in args.m.split(",")),
-        cpo_ratio=tuple(float(x) for x in args.cpo.split(",")))
-    kw = {}
-    if args.driver in ("random", "prf"):
-        kw["budget"] = args.budget
-    elif args.driver == "nsga2":
-        kw["pop_size"] = min(args.budget, 64)
-        kw["generations"] = args.generations
-    sweep = sweep_design_space(space, driver=args.driver,
-                               backend=args.backend, seed=args.seed, **kw)
-    n = len(sweep)
-    rate = sweep.n_sim / sweep.elapsed_s if sweep.elapsed_s else 0.0
-    print(f"\n=== {name}: {n} points evaluated "
-          f"({sweep.n_sim} sim / {sweep.n_cache_hits} cached) in "
-          f"{sweep.elapsed_s:.2f}s — {rate:,.0f} points/s ===")
-    best = sweep.best
-    pareto = sweep.pareto_indices()
-    out = {"model": name, "C_tflops": args.C, "driver": args.driver,
-           "evaluated": int(n), "sim_calls": int(sweep.n_sim),
-           "points_per_s": rate,
-           "best": sweep.describe(best) if best is not None else None,
-           "pareto": [sweep.describe(int(i)) for i in pareto[:args.top * 4]]}
-    if best is not None:
-        feas = np.nonzero(sweep.metrics["feasible"])[0]
-        order = feas[np.argsort(-sweep.metrics["throughput"][feas])]
-        for i in order[: args.top]:
-            d = sweep.describe(int(i))
-            print(f"  {d['throughput_tok_s']:.3e} tok/s  mfu={d['mfu']:.2f}"
-                  f"  ${d['cost_usd'] / 1e6:7.1f}M {d['power_w'] / 1e6:5.2f}MW"
-                  f"  {d['fabric']:6s} m={d['mcm']['m']:<2d}"
-                  f" r={d['mcm']['cpo_ratio']:.1f} {d['strategy']}")
-        print(f"  pareto surface: {len(pareto)} non-dominated points")
-        if args.refine:
-            pts = refine_top_points(sweep, top_k=args.top)
-            for p in pts:
-                print(f"  refined: {p.throughput:.3e} tok/s  "
-                      f"${p.cost / 1e6:.1f}M  (exact topo/OCS cost)")
-            out["refined"] = [
-                {"throughput_tok_s": p.throughput, "cost_usd": p.cost}
-                for p in pts]
-    else:
-        print("  no feasible point")
-    return out
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--model", default="qwen3_moe_235b_a22b",
-                    help="config name, or 'all' for the whole zoo")
-    ap.add_argument("--C", type=float, default=4e6,
-                    help="total cluster compute, TFLOPS")
-    ap.add_argument("--seq-len", type=int, default=10240)
-    ap.add_argument("--global-batch", type=int, default=512)
-    ap.add_argument("--fabrics", default="oi")
-    ap.add_argument("--dies", default="8,16,32")
-    ap.add_argument("--m", default="2,4,6,8,12")
-    ap.add_argument("--cpo", default="0.3,0.6,0.9")
-    ap.add_argument("--driver", default="exhaustive",
-                    choices=("exhaustive", "random", "prf", "nsga2"))
-    ap.add_argument("--budget", type=int, default=256,
-                    help="per-cell budget for non-exhaustive drivers")
-    ap.add_argument("--generations", type=int, default=12)
-    ap.add_argument("--backend", default="numpy",
-                    choices=("numpy", "jax"))
-    ap.add_argument("--no-reuse", action="store_true")
-    ap.add_argument("--refine", action="store_true",
-                    help="scalar-oracle refinement of the top points")
-    ap.add_argument("--top", type=int, default=5)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default="artifacts/dse/sweep.json")
-    args = ap.parse_args(argv)
-
-    if args.model == "all":
-        from repro.configs import ARCH_IDS
-        names = list(ARCH_IDS)
-    else:
-        names = [args.model]
-    results = [_sweep_one(n, args) for n in names]
-
-    out_path = Path(args.out)
-    out_path.parent.mkdir(parents=True, exist_ok=True)
-    out_path.write_text(json.dumps(results, indent=2))
-    print(f"\nwrote {out_path}")
+def main(argv=None) -> int:
+    warnings.warn(
+        "repro.dse.run is deprecated; use `python -m repro.cli` "
+        "(same flags, plus scenario JSON files)", DeprecationWarning,
+        stacklevel=2)
+    from repro import cli
+    return cli.main(argv)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())
