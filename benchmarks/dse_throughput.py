@@ -6,8 +6,14 @@ cross-variant sweep) against the scalar ``core.simulator.simulate``
 loop on the SAME points, and records design-points/sec so the perf
 trajectory of this path is tracked across PRs.  The design space comes
 from a ``repro.api.Scenario`` (the same spec the CLI runs), and the
-full ``Study.run()`` end-to-end time (sweep + scalar refinement +
-record assembly) is tracked alongside the raw kernel time.
+full ``Study.run()`` end-to-end time (sweep + refinement + record
+assembly) is tracked alongside the raw kernel time.
+
+NOTE: the ``points_per_s_study`` values frozen in BENCH_dse.json are
+the BASELINE that ``benchmarks/study_throughput.py`` measures its
+speedup against — re-running this script rewrites them to the current
+(optimized) study path, so only regenerate BENCH_dse.json when you
+mean to move that baseline.
 
     PYTHONPATH=src:. python benchmarks/dse_throughput.py
 """

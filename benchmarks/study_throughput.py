@@ -1,0 +1,155 @@
+"""Study-path throughput benchmark -> BENCH_study.json.
+
+Where ``dse_throughput.py`` tracks the raw batched-sweep kernel, this
+benchmark tracks the FULL ``Study.run()`` pipeline — sweep + Pareto
+keep-set + columnar record building + batched refinement — which is
+what users actually run.  The acceptance target of the perf PR that
+introduced it: ``points_per_s_study`` must be >= 10x the values frozen
+in BENCH_dse.json (the pre-optimization study path), with refined
+records ranked identically to the scalar-oracle refinement.
+
+    PYTHONPATH=src:. python benchmarks/study_throughput.py
+    PYTHONPATH=src:. python benchmarks/study_throughput.py --quick
+
+``--quick`` runs the tinyllama scenario only and exits non-zero if the
+study path regresses below the checked-in floor — the CI smoke mode.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.api import Scenario, Study
+
+REPO = Path(__file__).resolve().parents[1]
+OUT = REPO / "BENCH_study.json"
+BASELINE = REPO / "BENCH_dse.json"
+
+# CI regression floor (points/s through Study.run()).  Deliberately far
+# below the ~200-500k pts/s a warm laptop-class machine reaches, so only
+# a real regression (an accidental per-row Python loop, a quadratic
+# keep-set, an O(N^2) Pareto pass) trips it — not a noisy shared runner.
+QUICK_FLOOR_PTS_PER_S = 30_000.0
+
+MODELS = [
+    ("tinyllama_1_1b", 4096, 512),
+    ("qwen3_moe_235b_a22b", 10240, 512),
+    ("mixtral_8x7b", 8192, 256),
+]
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _baseline_study_pts() -> dict:
+    """points_per_s_study per model from the frozen BENCH_dse.json."""
+    if not BASELINE.exists():
+        return {}
+    data = json.loads(BASELINE.read_text())
+    return {r["model"]: r.get("points_per_s_study")
+            for r in data.get("results", [])}
+
+
+def _refine_ranking_matches(sc: Scenario) -> bool:
+    """Batched refinement must rank identically to the scalar oracle."""
+    from repro.dse.search import refine_top_points, sweep_design_space
+    sweep = sweep_design_space(sc.design_space(), backend=sc.backend,
+                               seed=sc.seed)
+    key = lambda p: ((p.strategy.tp, p.strategy.dp, p.strategy.pp,
+                      p.strategy.cp, p.strategy.ep, p.strategy.n_micro),
+                     p.mcm.n_mcm, p.mcm.m, p.fabric)
+    batched = refine_top_points(sweep, top_k=sc.refine_top)
+    scalar = refine_top_points(sweep, top_k=sc.refine_top,
+                               method="scalar")
+    return [key(p) for p in batched] == [key(p) for p in scalar]
+
+
+def bench_model(name: str, seq_len: int, global_batch: int,
+                C: float = 4e6, repeats: int = 5) -> dict:
+    sc = Scenario(model=name, total_tflops=C, seq_len=seq_len,
+                  global_batch=global_batch, fabrics=("oi",))
+    study = Study(sc)
+    res = study.run()                                       # warm-up
+    t_study = min(_timed(study.run) for _ in range(repeats))
+    n = int(res.provenance["grid_evaluated"])
+    return {
+        "model": name, "C_tflops": C, "design_points": n,
+        "n_records": len(res.records),
+        "n_refined": int(res.provenance["n_refined"]),
+        "study_s": t_study,
+        "sweep_s": res.timings["sweep_s"],
+        "points_per_s_study": n / t_study,
+        "refine_ranking_matches_scalar": _refine_ranking_matches(sc),
+    }
+
+
+def run(quick: bool = False) -> int:
+    base = _baseline_study_pts()
+    models = MODELS[:1] if quick else MODELS
+    results = []
+    for name, seq_len, gb in models:
+        r = bench_model(name, seq_len, gb)
+        b = base.get(name)
+        r["baseline_points_per_s_study"] = b
+        r["speedup_vs_baseline"] = (r["points_per_s_study"] / b) if b \
+            else None
+        results.append(r)
+
+    rows = [[r["model"], r["design_points"],
+             f"{r['study_s'] * 1e3:.1f}",
+             f"{r['points_per_s_study']:.0f}",
+             f"{r['speedup_vs_baseline']:.1f}"
+             if r["speedup_vs_baseline"] else "n/a",
+             r["refine_ranking_matches_scalar"]]
+            for r in results]
+    emit("study_throughput", rows,
+         ["model", "points", "study_ms", "points_per_s_study",
+          "speedup_vs_BENCH_dse", "refine_rank_ok"])
+
+    rc = 0
+    for r in results:
+        if not r["refine_ranking_matches_scalar"]:
+            print(f"FAIL: {r['model']} batched refinement ranking "
+                  f"diverges from the scalar oracle")
+            rc = 1
+    if quick:
+        pts = results[0]["points_per_s_study"]
+        if pts < QUICK_FLOOR_PTS_PER_S:
+            print(f"FAIL: study path at {pts:,.0f} pts/s is below the "
+                  f"floor of {QUICK_FLOOR_PTS_PER_S:,.0f} pts/s")
+            rc = 1
+        else:
+            print(f"OK: study path at {pts:,.0f} pts/s "
+                  f"(floor {QUICK_FLOOR_PTS_PER_S:,.0f})")
+        return rc                        # quick mode never rewrites JSON
+
+    speedups = [r["speedup_vs_baseline"] for r in results
+                if r["speedup_vs_baseline"]]
+    min_speedup = min(speedups) if speedups else None
+    payload = {"bench": "study_throughput", "results": results,
+               "min_speedup_vs_baseline": min_speedup}
+    OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    vs = f"{min_speedup:.0f}x" if min_speedup is not None \
+        else "n/a — no baseline in BENCH_dse.json"
+    print(f"wrote {OUT}  (min speedup vs BENCH_dse study path {vs})")
+    return rc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="tinyllama only + regression floor (CI smoke); "
+                         "does not rewrite BENCH_study.json")
+    args = ap.parse_args(argv)
+    return run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

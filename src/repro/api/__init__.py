@@ -5,5 +5,6 @@ from repro.api.registry import (DRIVERS, OBJECTIVES, Objective,  # noqa: F401
 from repro.api.scenario import SCENARIO_SCHEMA, Scenario  # noqa: F401
 from repro.api.result import (RESULT_SCHEMA, DesignRecord,  # noqa: F401
                               StudyResult, record_from_point,
-                              record_from_search, record_from_sweep)
+                              record_from_search, record_from_sweep,
+                              records_from_sweep)
 from repro.api.study import Study, run  # noqa: F401

@@ -92,20 +92,42 @@ def _mcm_dict(mcm) -> Dict[str, float]:
 
 def record_from_sweep(sweep, i: int) -> DesignRecord:
     """Adapter: one row of a ``repro.dse.search.SweepResult``."""
+    return records_from_sweep(sweep, np.array([i], np.int64))[0]
+
+
+def records_from_sweep(sweep, idx) -> List[DesignRecord]:
+    """Columnar adapter: many ``SweepResult`` rows at once.
+
+    The numpy -> Python conversion happens once per COLUMN (one
+    ``tolist`` each), not once per element, and the mcm dict is built
+    once per unique MCM variant — keeping thousands of Pareto rows
+    costs array ops plus one cheap constructor per record."""
+    idx = np.asarray(idx, np.int64)
+    if not len(idx):
+        return []
     b, met = sweep.batch, sweep.metrics
-    strategy = {"TP": int(b.tp[i]), "DP": int(b.dp[i]), "PP": int(b.pp[i]),
-                "CP": int(b.cp[i]), "EP": int(b.ep[i]),
-                "n_micro": int(b.n_micro[i])}
-    metrics = {"feasible": bool(met["feasible"][i]),
-               "throughput": float(met["throughput"][i]),
-               "step_time": float(met["step_time"][i]),
-               "mfu": float(met["mfu"][i]),
-               "cost": float(met["cost"][i]),
-               "power": float(met["power"][i])}
-    return DesignRecord(strategy=strategy,
-                        mcm=_mcm_dict(sweep.space.mcms[int(sweep.mcm_idx[i])]),
-                        fabric=str(sweep.fabric[i]), metrics=metrics,
-                        source="batched")
+    tp, dp, pp = b.tp[idx].tolist(), b.dp[idx].tolist(), b.pp[idx].tolist()
+    cp, ep = b.cp[idx].tolist(), b.ep[idx].tolist()
+    nm = b.n_micro[idx].tolist()
+    feas = np.asarray(met["feasible"], bool)[idx].tolist()
+    thpt = np.asarray(met["throughput"], np.float64)[idx].tolist()
+    stime = np.asarray(met["step_time"], np.float64)[idx].tolist()
+    mfu = np.asarray(met["mfu"], np.float64)[idx].tolist()
+    cost = np.asarray(met["cost"], np.float64)[idx].tolist()
+    power = np.asarray(met["power"], np.float64)[idx].tolist()
+    mis = np.asarray(sweep.mcm_idx, np.int64)[idx]
+    mcm_dicts = {int(m): _mcm_dict(sweep.space.mcms[int(m)])
+                 for m in np.unique(mis)}
+    mi = mis.tolist()
+    fabric = [str(f) for f in np.asarray(sweep.fabric)[idx].tolist()]
+    return [DesignRecord(
+        strategy={"TP": tp[i], "DP": dp[i], "PP": pp[i], "CP": cp[i],
+                  "EP": ep[i], "n_micro": nm[i]},
+        mcm=dict(mcm_dicts[mi[i]]), fabric=fabric[i],
+        metrics={"feasible": feas[i], "throughput": thpt[i],
+                 "step_time": stime[i], "mfu": mfu[i], "cost": cost[i],
+                 "power": power[i]},
+        source="batched") for i in range(len(idx))]
 
 
 def record_from_search(res, mcm, fabric: str, i: int) -> DesignRecord:

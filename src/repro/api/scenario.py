@@ -115,8 +115,8 @@ class Scenario:
                              f"allowed: {sorted(_HW_FIELDS)}")
         set_("driver_kw", dict(self.driver_kw))
 
-        if self.backend not in ("numpy", "jax"):
-            raise ValueError(f"backend must be numpy|jax, "
+        if self.backend not in ("numpy", "jax", "auto"):
+            raise ValueError(f"backend must be numpy|jax|auto, "
                              f"got {self.backend!r}")
         if self.refine_top < 0 or self.keep_top < 0:
             raise ValueError("refine_top and keep_top must be >= 0")

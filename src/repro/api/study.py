@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.api.registry import DRIVERS, OBJECTIVES
 from repro.api.result import (StudyResult, record_from_point,
-                              record_from_sweep)
+                              records_from_sweep)
 from repro.api.scenario import Scenario
 
 
@@ -55,7 +55,8 @@ def _sweep_keep_indices(sweep, sc: Scenario) -> np.ndarray:
     cols = np.where(sweep.metrics["feasible"][:, None], cols, np.nan)
     par = np.nonzero(pareto_mask(cols, [o.maximize for o in objs]))[0]
     keep = list(order[: sc.keep_top])
-    keep += [int(i) for i in par if i not in set(keep)]
+    kept = set(int(i) for i in keep)
+    keep += [int(i) for i in par if int(i) not in kept]
     return np.array(keep, np.int64)
 
 
@@ -91,7 +92,7 @@ def _run_batched(sc: Scenario, driver: str) -> StudyResult:
     sweep = sweep_design_space(space, driver=driver, backend=sc.backend,
                                seed=sc.seed, **kw)
     kept = _sweep_keep_indices(sweep, sc)
-    records = [record_from_sweep(sweep, int(i)) for i in kept]
+    records = records_from_sweep(sweep, kept)
     t1 = time.perf_counter()
     points = []
     if sc.refine_top and len(kept):

@@ -73,7 +73,8 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--budget", type=int, default=None,
                     help="per-cell budget for non-exhaustive drivers")
     ap.add_argument("--generations", type=int, default=None)
-    ap.add_argument("--backend", default=None, choices=("numpy", "jax"))
+    ap.add_argument("--backend", default=None,
+                choices=("numpy", "jax", "auto"))
     ap.add_argument("--no-reuse", action="store_true")
     ap.add_argument("--refine", action="store_true",
                     help="(legacy) refine the top --top points; "

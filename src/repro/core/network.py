@@ -210,3 +210,53 @@ def derive_physical(groups_degrees: Dict[str, int],
         if best is None or topo.ocs_count() < best.ocs_count():
             best = topo
     return best
+
+
+# ---------------------------------------------------------------------------
+# Memoized / batched derivation front-end (the refinement hot path)
+# ---------------------------------------------------------------------------
+# The partition enumeration above only reads (degrees, alloc, reuse_pair)
+# plus mcm.total_links, n_mcm and hw.ocs_ports — nothing else of the MCM
+# or HW.  DSE refinement re-derives the same handful of configurations
+# over and over (top-K winners cluster on a few strategy shapes), so a
+# content-keyed memo turns derivation into a dict hit.  Dict key order
+# matters: the fewest-OCS tie-break follows partition enumeration order,
+# which follows ``groups_degrees`` insertion order — keys preserve it.
+_DERIVE_CACHE: Dict[tuple, Optional[OITopology]] = {}
+_DERIVE_CACHE_MAX = 65536
+
+
+def derive_physical_cached(groups_degrees: Dict[str, int],
+                           link_alloc: Dict[str, int],
+                           mcm: MCMArch,
+                           n_mcm: int,
+                           hw: HW = DEFAULT_HW,
+                           reuse_pair: Optional[Tuple[str, str]] = None
+                           ) -> Optional[OITopology]:
+    """``derive_physical`` behind a content-keyed memo (identical
+    results; OITopology is frozen, so sharing instances is safe)."""
+    key = (tuple(groups_degrees.items()), tuple(link_alloc.items()),
+           reuse_pair, mcm.total_links, n_mcm, hw.ocs_ports)
+    try:
+        return _DERIVE_CACHE[key]
+    except KeyError:
+        pass
+    topo = derive_physical(groups_degrees, link_alloc, mcm, n_mcm, hw,
+                           reuse_pair=reuse_pair)
+    if len(_DERIVE_CACHE) >= _DERIVE_CACHE_MAX:
+        _DERIVE_CACHE.clear()
+    _DERIVE_CACHE[key] = topo
+    return topo
+
+
+def derive_physical_batch(rows: Sequence[Tuple[Dict[str, int],
+                                               Dict[str, int],
+                                               Optional[Tuple[str, str]]]],
+                          mcms: Sequence[MCMArch],
+                          hw: HW = DEFAULT_HW) -> List[Optional[OITopology]]:
+    """Derive one topology per (degrees, alloc, reuse_pair) row; row i
+    uses ``mcms[i]``.  The memo collapses duplicate configurations, so a
+    top-K refinement batch costs one real derivation per unique shape."""
+    return [derive_physical_cached(deg, alloc, mcm, mcm.n_mcm, hw,
+                                   reuse_pair=rp)
+            for (deg, alloc, rp), mcm in zip(rows, mcms)]

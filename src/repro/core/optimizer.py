@@ -20,7 +20,6 @@ strategy) plus the best point.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -31,7 +30,7 @@ from repro.core.cost import cluster_cost
 from repro.core.hardware import HW, DEFAULT_HW
 from repro.core.mcm import MCMArch, mcm_from_compute
 from repro.core.network import OITopology, RailDim, allocate_links, \
-    derive_physical
+    derive_physical_cached
 from repro.core.simulator import SimResult, map_intra, simulate
 from repro.core.traffic import Strategy, traffic_volumes, reusable_pairs
 from repro.core.workload import Workload
@@ -127,12 +126,12 @@ def evaluate_point(w: Workload, s: Strategy, mcm: MCMArch,
             reuse_pair = pairs[0] if pairs else None
         alloc = allocate_links(inter_vols, mcm.total_links, reuse_pair)
         inter_deg = {p: d for p, d in inter.items() if d > 1}
-        topo = derive_physical(inter_deg, alloc, mcm, mcm.n_mcm, hw,
-                               reuse_pair=reuse_pair)
+        topo = derive_physical_cached(inter_deg, alloc, mcm, mcm.n_mcm, hw,
+                                      reuse_pair=reuse_pair)
         if topo is None and reuse_pair is not None:
             alloc = allocate_links(inter_vols, mcm.total_links, None)
-            topo = derive_physical(inter_deg, alloc, mcm, mcm.n_mcm, hw,
-                                   reuse_pair=None)
+            topo = derive_physical_cached(inter_deg, alloc, mcm, mcm.n_mcm,
+                                          hw, reuse_pair=None)
         if topo is None and inter_deg:
             return None
     sim = simulate(w, s, mcm, fabric=fabric, topo=topo, reuse=reuse, hw=hw)

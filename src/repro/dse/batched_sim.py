@@ -12,6 +12,14 @@ Two backends for the compute/collective cost terms:
   * ``numpy``  (default) — straight float64 array math;
   * ``jax``    — the same term function run through jax.vmap + jit
                  under x64, for accelerator offload of very large grids.
+                 Compiled functions are cached per (fabric, hw,
+                 workload scalars) AND per shape bucket: batches are
+                 edge-padded to the next power of two, so sweeping
+                 grids of varying size re-traces only when a new bucket
+                 appears, not on every call.
+  * ``auto``   — ``jax`` when available and the batch clears
+                 ``JAX_AUTO_MIN_BATCH`` rows (where vmap+jit wins over
+                 plain numpy), else ``numpy``.
 
 The integer/combinatorial stages (intra-MCM packing, link allocation,
 reuse-pair choice) always run in numpy: they are data-dependent control
@@ -253,6 +261,28 @@ def traffic_volumes_batch(w: Workload, batch: StrategyBatch) -> np.ndarray:
     v_pp = 2.0 * (t_stage / tp) * w.d_model * w.bytes_act
     vols[:, P_IDX["PP"]] = np.where(pp > 1, v_pp, 0.0)
     return vols
+
+
+# ---------------------------------------------------------------------------
+# HBM capacity demand (port of simulate's capacity check)
+# ---------------------------------------------------------------------------
+def hbm_demand_batch(w: Workload, batch: StrategyBatch
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-point (HBM bytes demanded, local parameter count): weights +
+    optimizer state + pipeline-held activations.  The ONE batched copy
+    of the oracle's capacity-check expressions — both the feasibility
+    gate here and the refinement stage's ``mem_pressure`` log go
+    through it, so they cannot drift."""
+    tp, dp, pp, cp, ep = batch.tp, batch.dp, batch.pp, batch.cp, batch.ep
+    nm = np.maximum(batch.n_micro, 1)
+    layers_stage = np.maximum(w.n_layers // pp, 1)
+    local_params = (w.nonexpert_params / (tp * pp)
+                    + w.expert_params / (tp * pp * ep))
+    mem_bytes = local_params * (2 + 2) + local_params * 12 / dp
+    tokens_micro = w.tokens_per_step / (dp * cp * nm)
+    act_bytes = (tokens_micro * w.d_model * w.bytes_act / tp
+                 * layers_stage * 2 * np.minimum(pp, nm))
+    return mem_bytes + act_bytes, local_params
 
 
 # ---------------------------------------------------------------------------
@@ -500,17 +530,50 @@ _TERM_KEYS = ("vols", "alloc", "inv", "hops", "intra", "inter_mask",
               "pp", "cp", "reuse_overhead", "hbm_bw", "nop_bw", "dies")
 
 
+# incremented once per jax trace of the point function — lets tests (and
+# profiling) confirm the shape-bucketed cache actually stops re-tracing
+_JAX_TRACES = {"count": 0}
+
+# below this many rows the numpy path beats jax dispatch overhead; used
+# by backend="auto"
+JAX_AUTO_MIN_BATCH = 4096
+
+
 @functools.lru_cache(maxsize=64)
 def _jax_terms_fn(fabric: str, hw: HW, w_scalars: Tuple):
     import jax
     import jax.numpy as jnp
 
     def point_fn(*arrs):
+        _JAX_TRACES["count"] += 1
         a = dict(zip(_TERM_KEYS, arrs))
         a["w_scalars"] = w_scalars
         return _terms_core(jnp, a, fabric, hw)
 
     return jax.jit(jax.vmap(point_fn))
+
+
+@functools.lru_cache(maxsize=1)
+def _jax_available() -> bool:
+    try:
+        import jax                                   # noqa: F401
+        return True
+    except Exception:
+        return False
+
+
+def resolve_backend(backend: str, n_rows: int) -> str:
+    """Map ``auto`` to a concrete backend for a batch of ``n_rows``."""
+    if backend != "auto":
+        return backend
+    if n_rows >= JAX_AUTO_MIN_BATCH and _jax_available():
+        return "jax"
+    return "numpy"
+
+
+def _bucket(n: int) -> int:
+    """Next power of two >= n (floor 8) — the jit-cache shape grid."""
+    return 1 << max(int(n - 1).bit_length(), 3)
 
 
 def _run_terms(a: Dict, fabric: str, hw: HW, backend: str):
@@ -519,9 +582,19 @@ def _run_terms(a: Dict, fabric: str, hw: HW, backend: str):
     if backend == "jax":
         from jax.experimental import enable_x64
         fn = _jax_terms_fn(fabric, hw, a["w_scalars"])
+        B = a["vols"].shape[0]
+        pad = _bucket(B) - B
+        args = []
+        for k in _TERM_KEYS:
+            v = np.asarray(a[k])
+            if pad:                     # edge rows: real values, so the
+                v = np.pad(v,           # padded tail stays finite
+                           ((0, pad),) + ((0, 0),) * (v.ndim - 1),
+                           mode="edge")
+            args.append(v)
         with enable_x64():
-            out = fn(*(a[k] for k in _TERM_KEYS))
-        return {k: np.asarray(v) for k, v in out.items()}
+            out = fn(*args)
+        return {k: np.asarray(v)[:B] for k, v in out.items()}
     raise ValueError(f"unknown backend {backend!r}")
 
 
@@ -541,6 +614,7 @@ def batched_simulate(w: Workload, batch: StrategyBatch, mcm,
         hw = mcm.hw
     mb = _mcm_params(mcm)
     B = len(batch)
+    backend = resolve_backend(backend, B)
     if B == 0:
         z = np.zeros(0)
         zb = np.zeros(0, bool)
@@ -561,14 +635,8 @@ def batched_simulate(w: Workload, batch: StrategyBatch, mcm,
         if w.n_moe_layers else np.zeros(B, np.int64)
 
     # ---------------- memory capacity ----------------
-    local_params = (w.nonexpert_params / (tp * pp)
-                    + w.expert_params / (tp * pp * ep))
-    mem_bytes = local_params * (2 + 2) + local_params * 12 / dp
-    tokens_micro = w.tokens_per_step / (dp * cp * nm)
-    act_bytes = (tokens_micro * w.d_model * w.bytes_act / tp
-                 * layers_stage * 2 * np.minimum(pp, nm))
-    cap = mb.hbm_capacity
-    mem_ok = mem_bytes + act_bytes <= cap
+    demand, local_params = hbm_demand_batch(w, batch)
+    mem_ok = demand <= mb.hbm_capacity
 
     feasible = ok_dev & mappable & mem_ok
     reason = np.full(B, OK, np.int64)

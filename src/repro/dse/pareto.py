@@ -1,11 +1,15 @@
 """Fast non-dominated sorting over batched DSE objectives.
 
 Objectives arrive as an (N, K) float matrix plus a per-column sense
-(maximize / minimize).  ``pareto_mask`` finds the non-dominated set with
-chunked O(N^2) numpy broadcasting (no Python pair loops) — a few
-milliseconds for tens of thousands of points.  ``nondominated_sort``
-peels fronts NSGA-II-style and ``crowding_distance`` supplies the
-diversity metric for the evolutionary driver.
+(maximize / minimize).  ``pareto_mask`` finds the non-dominated set by
+sorting on the first objective and comparing each chunk only against the
+still-alive points that could possibly dominate it (those at least as
+good on objective 0) — O(N * front) broadcasting in practice, a few
+milliseconds for tens of thousands of points, with the same O(N^2)
+worst case only when nearly everything is mutually non-dominated.
+``nondominated_sort`` peels fronts NSGA-II-style and
+``crowding_distance`` supplies the diversity metric for the
+evolutionary driver.
 """
 from __future__ import annotations
 
@@ -28,22 +32,58 @@ def pareto_mask(objectives: np.ndarray, maximize: Sequence[bool],
     (>= in every objective, > in at least one).  Duplicate points keep
     each other (neither strictly dominates)."""
     M = _as_max(objectives, maximize)
-    n = M.shape[0]
-    keep = np.ones(n, bool)
     # a point with any NaN objective never survives
-    keep &= ~np.isnan(M).any(1)
+    keep = ~np.isnan(M).any(1)
     idx = np.nonzero(keep)[0]
+    if not len(idx):
+        return keep
+    # descending objective-0 order: a dominator of row j must sit at or
+    # before j's value band (obj0 >= obj0_j), so each chunk is compared
+    # against the alive prefix only.  Not-yet-processed rows inside that
+    # prefix are safe dominators: weak dominance is transitive, so if
+    # such a row is later culled, whatever culled it dominates too.
     Mv = M[idx]
-    alive = np.ones(len(idx), bool)
-    for lo in range(0, len(idx), chunk):
-        blk = Mv[lo:lo + chunk]                       # (c, K)
-        # dominated[j] = exists i alive: M_i >= blk_j (all) and > (any)
-        ge = (Mv[:, None, :] >= blk[None, :, :]).all(-1)      # (n, c)
-        gt = (Mv[:, None, :] > blk[None, :, :]).any(-1)
-        dom = (ge & gt & alive[:, None]).any(0)
-        alive[lo:lo + chunk] &= ~dom
-    keep[idx] = alive
+    order = np.argsort(-Mv[:, 0], kind="stable")
+    Ms = Mv[order]
+    m = len(order)
+    alive = np.ones(m, bool)
+    neg0 = -Ms[:, 0]                                 # ascending
+    for lo in range(0, m, chunk):
+        hi = min(lo + chunk, m)
+        blk = Ms[lo:hi]                              # (c, K)
+        # stage 1: cull against the already-settled front (cheap — the
+        # front is tiny, and it kills most of the chunk).  Transitivity
+        # makes the two-stage split safe: any chunk row that could have
+        # culled a sibling but died here is dominated by a front member
+        # that culls the sibling too.
+        prior = np.nonzero(alive[:lo])[0]
+        if len(prior):
+            alive[lo:hi] &= ~_dominated_by(Ms[prior], blk)
+        # stage 2: survivors vs the alive slice of their own obj0 band —
+        # the chunk itself plus any later rows tied on objective 0 (blk
+        # is sorted, so the band's minimum is its last row)
+        live = np.nonzero(alive[lo:hi])[0] + lo
+        if not len(live):
+            continue
+        stop = np.searchsorted(neg0, -blk[-1, 0], side="right")
+        band = np.nonzero(alive[lo:stop])[0] + lo
+        alive[live] &= ~_dominated_by(Ms[band], Ms[live])
+    keep[idx[order[~alive]]] = False
     return keep
+
+
+def _dominated_by(C: np.ndarray, B: np.ndarray) -> np.ndarray:
+    """(len(B),) bool — B_j weakly dominated by some C_i (>= everywhere,
+    > somewhere; equal rows do not dominate).  Built from per-objective
+    2-D comparisons to avoid 3-D broadcast temporaries."""
+    ge = np.ones((C.shape[0], B.shape[0]), bool)
+    eq = np.ones_like(ge)
+    for k in range(C.shape[1]):
+        ck = C[:, k, None]
+        bk = B[None, :, k]
+        ge &= ck >= bk
+        eq &= ck == bk
+    return (ge & ~eq).any(0)
 
 
 def nondominated_sort(objectives: np.ndarray, maximize: Sequence[bool],

@@ -1,9 +1,19 @@
 """Search drivers over the batched DSE engine.
 
-All drivers share one ``BatchedEvaluator`` interface — evaluate a
-``StrategyBatch``, get SoA results — plus an evaluation cache keyed by
-design-point hash, so revisited points (evolutionary loops, repeated
-sweeps) cost nothing.  Drivers:
+All drivers share one cached batched-evaluate interface plus a
+generator "stepper" core: a stepper yields arrays of candidate grid
+indices and receives their metrics, so the SAME driver logic runs in
+two harnesses —
+
+  * per cell:  ``search_*`` drive one stepper against one
+               ``BatchedEvaluator`` (one (workload, MCM, fabric) cell);
+  * fused:     ``sweep_design_space`` drives every cell's stepper in
+               lockstep and evaluates each round's candidates from ALL
+               cells in one ``batched_simulate`` call per fabric
+               (``MCMBatch``) — the way the exhaustive ``_sweep_fused``
+               path always did, now for random/PRF/NSGA-II too.
+
+Drivers:
 
   * ``search_exhaustive`` — the whole grid in one batched call;
   * ``search_random``     — uniform subsample (baseline);
@@ -13,11 +23,12 @@ sweeps) cost nothing.  Drivers:
                             crowding selection, log2-space crossover /
                             mutation, nearest-valid-point repair).
 
-``sweep_design_space`` runs a driver over every (MCM, fabric) cell of a
-``DesignSpace`` and returns the cross-layer Pareto surface over
-(throughput, cost, power).  Costs here exclude the OCS component (it
-needs the derived physical topology); ``refine_top_points`` re-evaluates
-winners through the scalar oracle for exact topologies and costs.
+``sweep_design_space`` returns the cross-layer Pareto surface over
+(throughput, cost, power).  Costs there exclude the OCS component (it
+needs the derived physical topology); ``refine_top_points`` re-derives
+exact topologies and OCS-inclusive costs for the winners — vectorized
+by default (one batched call + memoized ``derive_physical`` for all
+top-K points), with the scalar oracle kept as the parity reference.
 """
 from __future__ import annotations
 
@@ -30,10 +41,10 @@ from repro.core.cost import cluster_cost
 from repro.core.hardware import HW
 from repro.core.mcm import MCMArch
 from repro.core.workload import Workload
-from repro.dse.batched_sim import batched_simulate
+from repro.dse.batched_sim import MCMBatch, batched_simulate
 from repro.dse.pareto import (crowding_distance, nondominated_sort,
                               pareto_mask)
-from repro.dse.space import (DesignSpace, StrategyBatch,
+from repro.dse.space import (DesignSpace, P_IDX, P_ORDER, StrategyBatch,
                              enumerate_strategy_batch)
 
 Objective = Tuple[str, bool]          # (result field, maximize?)
@@ -50,7 +61,15 @@ _RESULT_FIELDS = ("feasible", "step_time", "throughput", "mfu", "power")
 class BatchedEvaluator:
     """Batched evaluate with a design-point cache for one (workload, MCM,
     fabric, reuse) cell.  ``cost`` is the topology-independent cluster
-    cost of the cell (constant across strategies; OCS excluded)."""
+    cost of the cell (constant across strategies; OCS excluded).
+
+    The cache is vectorized: each point's six strategy integers are
+    bit-packed into one uint64 key (column widths adapt to the values
+    seen, repacking when they grow), membership is one ``searchsorted``
+    over the sorted cached keys, and values live in one (N, 5) float
+    matrix — no per-row Python on the hit path.  If the packed widths
+    ever exceed 64 bits (absurd degrees), it degrades to the exact
+    dict-of-tuples path."""
 
     def __init__(self, w: Workload, mcm: MCMArch, fabric: str = "oi",
                  reuse: bool = True, hw: Optional[HW] = None,
@@ -62,27 +81,118 @@ class BatchedEvaluator:
         self.hw = hw or mcm.hw
         self.backend = backend
         self.cost = cluster_cost(mcm, None, fabric=fabric, hw=self.hw).total
-        self._cache: Dict[Tuple[int, ...], Tuple] = {}
         self.n_sim = 0
         self.n_hits = 0
+        self._ccols = np.zeros((0, 6), np.int64)   # raw key columns
+        self._ckeys = np.zeros(0, np.uint64)       # packed, insertion order
+        self._cvals = np.zeros((0, len(_RESULT_FIELDS)))
+        self._corder = np.zeros(0, np.int64)       # argsort of _ckeys
+        self._cmax = np.zeros(6, np.int64)         # per-column max seen
+        self._shifts: Optional[np.ndarray] = None
+        self._fallback: Optional[Dict[Tuple[int, ...], np.ndarray]] = None
 
+    # -- uint64 key packing ------------------------------------------------
+    def _ensure_widths(self, cols: np.ndarray) -> bool:
+        """Adapt column bit widths to ``cols``; returns False when the
+        values cannot be packed (switches to the dict fallback)."""
+        if len(cols) and cols.min() < 0:   # uint64 cast would wrap and
+            return False                   # could collide packed keys
+        mx = np.maximum(self._cmax, cols.max(0)) if len(cols) else self._cmax
+        if self._shifts is not None and (mx <= self._cmax).all():
+            return True
+        widths = np.array([max(int(v).bit_length(), 1) for v in mx],
+                          np.int64)
+        if int(widths.sum()) > 64:
+            return False
+        self._cmax = mx
+        self._shifts = np.concatenate([[0], np.cumsum(widths)[:-1]]) \
+            .astype(np.uint64)
+        if len(self._ccols):                       # repack under new widths
+            self._ckeys = self._pack(self._ccols)
+            self._corder = np.argsort(self._ckeys, kind="stable")
+        return True
+
+    def _pack(self, cols: np.ndarray) -> np.ndarray:
+        key = np.zeros(len(cols), np.uint64)
+        u = cols.astype(np.uint64)
+        for j in range(6):
+            key |= u[:, j] << self._shifts[j]
+        return key
+
+    def _lookup(self, qkeys: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        """(hit mask, cache rows for the hits) for packed query keys."""
+        nk = len(self._ckeys)
+        if nk == 0:
+            return np.zeros(len(qkeys), bool), np.zeros(0, np.int64)
+        skeys = self._ckeys[self._corder]
+        pos = np.minimum(np.searchsorted(skeys, qkeys), nk - 1)
+        hit = skeys[pos] == qkeys
+        return hit, self._corder[pos[hit]]
+
+    # -- evaluation --------------------------------------------------------
     def evaluate(self, batch: StrategyBatch) -> Dict[str, np.ndarray]:
-        keys = batch.keys()
-        miss = [i for i, k in enumerate(keys) if k not in self._cache]
+        B = len(batch)
+        cols = np.stack([batch.tp, batch.dp, batch.pp, batch.cp,
+                         batch.ep, batch.n_micro], 1) if B else \
+            np.zeros((0, 6), np.int64)
+        if self._fallback is None and not self._ensure_widths(cols):
+            self._to_fallback()
+        if self._fallback is not None:
+            return self._evaluate_fallback(batch, cols)
+
+        out = np.empty((B, len(_RESULT_FIELDS)))
+        qkeys = self._pack(cols)
+        hit, rows = self._lookup(qkeys)
+        self.n_hits += int(hit.sum())
+        out[hit] = self._cvals[rows]
+        miss = np.nonzero(~hit)[0]
+        if len(miss):
+            sub = batch.take(miss)
+            res = batched_simulate(self.w, sub, self.mcm, self.fabric,
+                                   self.reuse, self.hw, self.backend)
+            self.n_sim += len(sub)
+            vals = np.stack([np.asarray(getattr(res, f), np.float64)
+                             for f in _RESULT_FIELDS], 1)
+            out[miss] = vals
+            # duplicate keys inside one batch agree — keep the first
+            _, first = np.unique(qkeys[miss], return_index=True)
+            self._ccols = np.concatenate([self._ccols, cols[miss][first]])
+            self._ckeys = np.concatenate([self._ckeys, qkeys[miss][first]])
+            self._cvals = np.concatenate([self._cvals, vals[first]])
+            self._corder = np.argsort(self._ckeys, kind="stable")
+        return self._metrics_from(out, B)
+
+    def _metrics_from(self, out: np.ndarray, B: int
+                      ) -> Dict[str, np.ndarray]:
+        m = {f: out[:, j].copy() for j, f in enumerate(_RESULT_FIELDS)}
+        m["feasible"] = out[:, 0] != 0.0
+        m["cost"] = np.full(B, self.cost)
+        return m
+
+    # -- exact dict path for unpackable values -----------------------------
+    def _to_fallback(self):
+        self._fallback = {tuple(r): self._cvals[i]
+                          for i, r in enumerate(self._ccols.tolist())}
+
+    def _evaluate_fallback(self, batch: StrategyBatch, cols: np.ndarray
+                           ) -> Dict[str, np.ndarray]:
+        keys = [tuple(r) for r in cols.tolist()]
+        miss = [i for i, k in enumerate(keys) if k not in self._fallback]
         self.n_hits += len(keys) - len(miss)
+        out = np.empty((len(keys), len(_RESULT_FIELDS)))
         if miss:
             sub = batch.take(np.array(miss, np.int64))
             res = batched_simulate(self.w, sub, self.mcm, self.fabric,
                                    self.reuse, self.hw, self.backend)
             self.n_sim += len(sub)
-            cols = [np.asarray(getattr(res, f)) for f in _RESULT_FIELDS]
+            vals = np.stack([np.asarray(getattr(res, f), np.float64)
+                             for f in _RESULT_FIELDS], 1)
             for j, i in enumerate(miss):
-                self._cache[keys[i]] = tuple(c[j] for c in cols)
-        rows = [self._cache[k] for k in keys]
-        out = {f: np.array([r[j] for r in rows])
-               for j, f in enumerate(_RESULT_FIELDS)}
-        out["cost"] = np.full(len(batch), self.cost)
-        return out
+                self._fallback[keys[i]] = vals[j]
+        for i, k in enumerate(keys):
+            out[i] = self._fallback[k]
+        return self._metrics_from(out, len(keys))
 
 
 @dataclass
@@ -120,39 +230,35 @@ def _result(ev: BatchedEvaluator, grid: StrategyBatch, idx: np.ndarray
 
 
 # ---------------------------------------------------------------------------
-# Drivers
+# Driver steppers — the engine-agnostic driver cores
 # ---------------------------------------------------------------------------
-def search_exhaustive(ev: BatchedEvaluator,
-                      grid: Optional[StrategyBatch] = None) -> SearchResult:
-    grid = grid if grid is not None else enumerate_strategy_batch(
-        ev.w, ev.mcm)
-    return _result(ev, grid, np.arange(len(grid)))
+# A stepper is a generator over ONE cell grid: it yields int64 arrays of
+# candidate grid indices, receives their metrics dict via .send(), and
+# returns the final evaluated index set via StopIteration.value.
 
-
-def search_random(ev: BatchedEvaluator, budget: int, seed: int = 0,
-                  grid: Optional[StrategyBatch] = None) -> SearchResult:
-    grid = grid if grid is not None else enumerate_strategy_batch(
-        ev.w, ev.mcm)
+def _random_indices(n: int, budget: int, seed: int) -> np.ndarray:
     rng = np.random.default_rng(seed)
-    n = len(grid)
-    idx = rng.permutation(n)[: min(budget, n)]
-    return _result(ev, grid, np.sort(idx))
+    return np.sort(rng.permutation(n)[: min(budget, n)])
 
 
-def search_prf_ucb(ev: BatchedEvaluator, budget: int, seed: int = 0,
-                   batch_size: int = 16, kappa: float = 1.0,
-                   grid: Optional[StrategyBatch] = None) -> SearchResult:
+def _stepper_random(grid: StrategyBatch, budget: int, seed: int = 0):
+    idx = _random_indices(len(grid), budget, seed)
+    if len(idx):
+        yield idx
+    return idx
+
+
+def _stepper_prf(grid: StrategyBatch, budget: int, seed: int = 0,
+                 batch_size: int = 16, kappa: float = 1.0):
     """Batched PRF-UCB: random init, then acquire top-UCB *batches*."""
     from repro.core.prf import PRF
-    grid = grid if grid is not None else enumerate_strategy_batch(
-        ev.w, ev.mcm)
     n = len(grid)
     budget = min(budget, n)
     rng = np.random.default_rng(seed)
     feats = grid.features()
     tried = list(rng.permutation(n)[: max(min(budget // 2, n), 1)])
-    thpt = ev.evaluate(grid.take(np.array(tried)))["throughput"]
-    scores = list(thpt)
+    m = yield np.array(tried, np.int64)
+    scores = list(m["throughput"])
     while len(tried) < budget:
         rest = np.setdiff1d(np.arange(n), np.array(tried))
         if len(scores) >= 4:
@@ -163,43 +269,40 @@ def search_prf_ucb(ev: BatchedEvaluator, budget: int, seed: int = 0,
         else:
             order = rng.permutation(rest)
         pick = order[: min(batch_size, budget - len(tried))]
-        got = ev.evaluate(grid.take(pick))["throughput"]
+        got = (yield np.asarray(pick, np.int64))["throughput"]
         tried.extend(int(i) for i in pick)
         scores.extend(got)
-    return _result(ev, grid, np.array(tried))
+    return np.array(tried, np.int64)
 
 
-def search_nsga2(ev: BatchedEvaluator, pop_size: int = 32,
-                 generations: int = 12, seed: int = 0,
-                 objectives: Sequence[Objective] = DEFAULT_OBJECTIVES,
-                 mutation_p: float = 0.3,
-                 grid: Optional[StrategyBatch] = None) -> SearchResult:
+def _stepper_nsga2(grid: StrategyBatch, pop_size: int = 32,
+                   generations: int = 12, seed: int = 0,
+                   objectives: Sequence[Objective] = DEFAULT_OBJECTIVES,
+                   mutation_p: float = 0.3):
     """NSGA-II-lite over the valid strategy grid.
 
     Genomes are grid indices; crossover/mutation act in log2-degree
     space and land back on the grid via nearest-valid-point repair, so
     every individual is a real (mappable) design point.  The cache makes
     revisits free."""
-    grid = grid if grid is not None else enumerate_strategy_batch(
-        ev.w, ev.mcm)
     n = len(grid)
     if n == 0:
-        return _result(ev, grid, np.arange(0))
+        return np.zeros(0, np.int64)
     rng = np.random.default_rng(seed)
     feats = grid.features()                      # (n, 6) log2 coords
     pop = rng.permutation(n)[: min(pop_size, n)]
     seen = set(int(i) for i in pop)
+    maximize = [mx for _, mx in objectives]
 
-    def rank_crowd(idx: np.ndarray):
-        m = ev.evaluate(grid.take(idx))
+    def rank_crowd(m: Dict[str, np.ndarray], k: int):
         obj = np.stack([m[f] for f, _ in objectives], 1)
-        obj = np.where(m["feasible"][:, None], obj, np.nan)
-        maximize = [mx for _, mx in objectives]
+        obj = np.where(np.asarray(m["feasible"], bool)[:, None], obj,
+                       np.nan)
         ranks = nondominated_sort(obj, maximize)
-        crowd = np.zeros(len(idx))
+        crowd = np.zeros(k)
         for r in np.unique(ranks):
             sel = ranks == r
-            if r >= len(idx) or sel.sum() == 0:
+            if r >= k or sel.sum() == 0:
                 continue
             sub = np.nan_to_num(obj[sel], nan=-np.inf)
             crowd[sel] = crowding_distance(sub, maximize)
@@ -211,7 +314,8 @@ def search_nsga2(ev: BatchedEvaluator, pop_size: int = 32,
         return np.argmin(d, 1)
 
     for _ in range(generations):
-        ranks, crowd = rank_crowd(pop)
+        m = yield np.asarray(pop, np.int64)
+        ranks, crowd = rank_crowd(m, len(pop))
 
         def tourney() -> int:
             a, b = rng.integers(len(pop), size=2)
@@ -231,11 +335,66 @@ def search_nsga2(ev: BatchedEvaluator, pop_size: int = 32,
         kid_idx = repair(np.stack(children))
         union = np.unique(np.concatenate([pop, kid_idx]))
         seen.update(int(i) for i in kid_idx)
-        ranks_u, crowd_u = rank_crowd(union)
+        mu = yield np.asarray(union, np.int64)
+        ranks_u, crowd_u = rank_crowd(mu, len(union))
         order = np.lexsort((-crowd_u, ranks_u))
         pop = union[order[: min(pop_size, len(union))]]
 
-    return _result(ev, grid, np.array(sorted(seen), np.int64))
+    return np.array(sorted(seen), np.int64)
+
+
+def _drive(ev: BatchedEvaluator, grid: StrategyBatch, gen) -> SearchResult:
+    """Run one stepper against one cell evaluator."""
+    try:
+        req = next(gen)
+        while True:
+            m = ev.evaluate(grid.take(np.asarray(req, np.int64)))
+            req = gen.send(m)
+    except StopIteration as e:
+        final = np.asarray(e.value, np.int64)
+    return _result(ev, grid, final)
+
+
+# ---------------------------------------------------------------------------
+# Per-cell drivers (public API, unchanged signatures)
+# ---------------------------------------------------------------------------
+def search_exhaustive(ev: BatchedEvaluator,
+                      grid: Optional[StrategyBatch] = None) -> SearchResult:
+    grid = grid if grid is not None else enumerate_strategy_batch(
+        ev.w, ev.mcm)
+    return _result(ev, grid, np.arange(len(grid)))
+
+
+def search_random(ev: BatchedEvaluator, budget: int, seed: int = 0,
+                  grid: Optional[StrategyBatch] = None) -> SearchResult:
+    grid = grid if grid is not None else enumerate_strategy_batch(
+        ev.w, ev.mcm)
+    return _result(ev, grid, _random_indices(len(grid), budget, seed))
+
+
+def search_prf_ucb(ev: BatchedEvaluator, budget: int, seed: int = 0,
+                   batch_size: int = 16, kappa: float = 1.0,
+                   grid: Optional[StrategyBatch] = None) -> SearchResult:
+    grid = grid if grid is not None else enumerate_strategy_batch(
+        ev.w, ev.mcm)
+    return _drive(ev, grid, _stepper_prf(grid, budget, seed=seed,
+                                         batch_size=batch_size,
+                                         kappa=kappa))
+
+
+def search_nsga2(ev: BatchedEvaluator, pop_size: int = 32,
+                 generations: int = 12, seed: int = 0,
+                 objectives: Sequence[Objective] = DEFAULT_OBJECTIVES,
+                 mutation_p: float = 0.3,
+                 grid: Optional[StrategyBatch] = None) -> SearchResult:
+    grid = grid if grid is not None else enumerate_strategy_batch(
+        ev.w, ev.mcm)
+    if len(grid) == 0:
+        return _result(ev, grid, np.arange(0))
+    return _drive(ev, grid, _stepper_nsga2(grid, pop_size=pop_size,
+                                           generations=generations,
+                                           seed=seed, objectives=objectives,
+                                           mutation_p=mutation_p))
 
 
 DRIVERS: Dict[str, Callable] = {
@@ -243,6 +402,12 @@ DRIVERS: Dict[str, Callable] = {
     "random": search_random,
     "prf": search_prf_ucb,
     "nsga2": search_nsga2,
+}
+
+_STEPPERS: Dict[str, Callable] = {
+    "random": _stepper_random,
+    "prf": _stepper_prf,
+    "nsga2": _stepper_nsga2,
 }
 
 
@@ -299,20 +464,30 @@ class SweepResult:
         }
 
 
+def _empty_sweep(space: DesignSpace, elapsed: float) -> SweepResult:
+    empty = StrategyBatch.from_strategies([])
+    return SweepResult(space, empty, np.zeros(0, np.int64),
+                       np.zeros(0, "<U8"),
+                       {f: np.zeros(0) for f in
+                        (*_RESULT_FIELDS, "cost")}, 0, 0, elapsed)
+
+
 def _sweep_fused(space: DesignSpace, backend: str) -> SweepResult:
     """Exhaustive sweep as ONE batched_simulate call per fabric: the
     strategy grids of every MCM variant are concatenated and evaluated
     against an ``MCMBatch`` of per-point parameters — no per-cell
     Python, which is what makes small-grid model configs fast too."""
     import time
-    from repro.dse.batched_sim import MCMBatch
     t0 = time.perf_counter()
+    mcm_pos = {id(m): i for i, m in enumerate(space.mcms)}
     cells = list(space.batches())
-    by_fabric: Dict[str, List] = {}
+    # one batched call per (fabric, hw): a hand-built DesignSpace may
+    # mix HW configs across MCM variants
+    by_group: Dict[Tuple[str, int], List] = {}
     for mcm, fabric, grid in cells:
-        by_fabric.setdefault(fabric, []).append((mcm, grid))
+        by_group.setdefault((fabric, id(mcm.hw)), []).append((mcm, grid))
     batches, mcm_idx, fabric_col, metric_parts, n_sim = [], [], [], [], 0
-    for fabric, sub in by_fabric.items():
+    for (fabric, _), sub in by_group.items():
         batch = StrategyBatch.concat([g for _, g in sub])
         local = np.concatenate([np.full(len(g), i, np.int64)
                                 for i, (_, g) in enumerate(sub)])
@@ -324,7 +499,7 @@ def _sweep_fused(space: DesignSpace, backend: str) -> SweepResult:
         costs = np.array([cluster_cost(m, None, fabric=fabric,
                                        hw=m.hw).total for m in mcms])[local]
         batches.append(batch)
-        mcm_idx.append(np.array([space.mcms.index(m) for m in mcms],
+        mcm_idx.append(np.array([mcm_pos[id(m)] for m in mcms],
                                 np.int64)[local])
         fabric_col.append(np.full(len(batch), fabric))
         metric_parts.append({**{f: np.asarray(getattr(res, f))
@@ -332,11 +507,7 @@ def _sweep_fused(space: DesignSpace, backend: str) -> SweepResult:
         n_sim += len(batch)
     elapsed = time.perf_counter() - t0
     if not batches:
-        empty = StrategyBatch.from_strategies([])
-        return SweepResult(space, empty, np.zeros(0, np.int64),
-                           np.zeros(0, "<U8"),
-                           {f: np.zeros(0) for f in
-                            (*_RESULT_FIELDS, "cost")}, 0, 0, elapsed)
+        return _empty_sweep(space, elapsed)
     metrics = {f: np.concatenate([p[f] for p in metric_parts])
                for f in (*_RESULT_FIELDS, "cost")}
     return SweepResult(space, StrategyBatch.concat(batches),
@@ -345,53 +516,184 @@ def _sweep_fused(space: DesignSpace, backend: str) -> SweepResult:
                        n_sim=n_sim, n_cache_hits=0, elapsed_s=elapsed)
 
 
+class _FusedEvaluator:
+    """Cross-cell evaluator over the concatenated grids of every
+    (MCM, fabric) cell: rows are GLOBAL indices, the cache is a
+    row-indexed value matrix (exact — no hashing needed), and every
+    evaluate round issues one ``batched_simulate`` per fabric spanning
+    all touched cells via ``MCMBatch``."""
+
+    def __init__(self, space: DesignSpace,
+                 cells: List[Tuple[int, str, StrategyBatch]],
+                 backend: str = "numpy"):
+        self.space = space
+        self.backend = backend
+        grids = [g for _, _, g in cells]
+        sizes = np.array([len(g) for g in grids], np.int64)
+        self.batch = StrategyBatch.concat(grids)
+        self.offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]]) \
+            .astype(np.int64)
+        cell_of = np.repeat(np.arange(len(cells)), sizes)
+        self.mcm_idx = np.array([mi for mi, _, _ in cells],
+                                np.int64)[cell_of]
+        self.fabric_names = sorted({fb for _, fb, _ in cells})
+        fcode = {f: i for i, f in enumerate(self.fabric_names)}
+        self.fabric_code = np.array([fcode[fb] for _, fb, _ in cells],
+                                    np.int64)[cell_of]
+        self.mb = MCMBatch.from_mcms(space.mcms, self.mcm_idx)
+        cost_cell: Dict[Tuple[int, str], float] = {}
+        for mi, fb, _ in cells:
+            if (mi, fb) not in cost_cell:
+                m = space.mcms[mi]
+                cost_cell[(mi, fb)] = cluster_cost(m, None, fabric=fb,
+                                                   hw=m.hw).total
+        self.cost = np.array([cost_cell[(mi, fb)]
+                              for mi, fb, _ in cells])[cell_of]
+        n = len(self.batch)
+        self._have = np.zeros(n, bool)
+        self._vals = np.empty((n, len(_RESULT_FIELDS)))
+        # a hand-built DesignSpace may mix HW configs across MCM
+        # variants — simulate per (fabric, hw) group, not per fabric
+        self.hw_objs: List[HW] = []
+        code_cells = []
+        for mi, _, _ in cells:
+            h = space.mcms[mi].hw
+            for j, ho in enumerate(self.hw_objs):
+                if ho is h:
+                    code_cells.append(j)
+                    break
+            else:
+                code_cells.append(len(self.hw_objs))
+                self.hw_objs.append(h)
+        self.hw_code = np.array(code_cells, np.int64)[cell_of]
+        self.n_sim = 0
+        self.n_hits = 0
+
+    def evaluate_idx(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
+        idx = np.asarray(idx, np.int64)
+        self.n_hits += int(self._have[idx].sum())
+        miss = np.unique(idx[~self._have[idx]])
+        for fc, fabric in enumerate(self.fabric_names):
+            for hc, hw in enumerate(self.hw_objs):
+                rows = miss[(self.fabric_code[miss] == fc)
+                            & (self.hw_code[miss] == hc)]
+                if not len(rows):
+                    continue
+                self._simulate_rows(rows, fabric, hw)
+        out = {f: self._vals[idx, j].copy()
+               for j, f in enumerate(_RESULT_FIELDS)}
+        out["feasible"] = self._vals[idx, 0] != 0.0
+        out["cost"] = self.cost[idx]
+        return out
+
+    def _simulate_rows(self, rows: np.ndarray, fabric: str, hw: HW):
+        res = batched_simulate(self.space.workload,
+                               self.batch.take(rows),
+                               self.mb.take(rows), fabric=fabric,
+                               reuse=self.space.reuse, hw=hw,
+                               backend=self.backend)
+        self._vals[rows] = np.stack(
+            [np.asarray(getattr(res, f), np.float64)
+             for f in _RESULT_FIELDS], 1)
+        self._have[rows] = True
+        self.n_sim += len(rows)
+
+
+def _sweep_with_driver(space: DesignSpace, driver: str, backend: str,
+                       seed: int, **driver_kw) -> SweepResult:
+    """Drive every cell's stepper in lockstep rounds; each round's
+    candidate batches from ALL cells are evaluated together (one
+    batched_simulate per fabric)."""
+    import time
+    t0 = time.perf_counter()
+    mcm_pos = {id(m): i for i, m in enumerate(space.mcms)}
+    cells = [(mcm_pos[id(m)], fb, g) for m, fb, g in space.batches()]
+    if not cells:
+        return _empty_sweep(space, time.perf_counter() - t0)
+    fev = _FusedEvaluator(space, cells, backend)
+    stepper = _STEPPERS[driver]
+    gens: List = []
+    reqs: Dict[int, np.ndarray] = {}
+    finals: Dict[int, np.ndarray] = {}
+    for ci, (_, _, grid) in enumerate(cells):
+        kw = dict(driver_kw)
+        kw.setdefault("seed", seed + ci)
+        gen = stepper(grid, **kw)
+        gens.append(gen)
+        try:
+            reqs[ci] = np.asarray(next(gen), np.int64)
+        except StopIteration as e:
+            finals[ci] = np.asarray(e.value, np.int64)
+    while reqs:
+        order = sorted(reqs)
+        glob = np.concatenate([fev.offsets[ci] + reqs[ci]
+                               for ci in order])
+        m = fev.evaluate_idx(glob)
+        nxt: Dict[int, np.ndarray] = {}
+        pos = 0
+        for ci in order:
+            ln = len(reqs[ci])
+            sl = {k: v[pos:pos + ln] for k, v in m.items()}
+            pos += ln
+            try:
+                nxt[ci] = np.asarray(gens[ci].send(sl), np.int64)
+            except StopIteration as e:
+                finals[ci] = np.asarray(e.value, np.int64)
+        reqs = nxt
+    glob_final = np.concatenate([fev.offsets[ci] + finals[ci]
+                                 for ci in range(len(cells))])
+    metrics = fev.evaluate_idx(glob_final)          # all cache hits
+    fabric = np.array(fev.fabric_names)[fev.fabric_code[glob_final]]
+    return SweepResult(space, fev.batch.take(glob_final),
+                       fev.mcm_idx[glob_final], fabric, metrics,
+                       n_sim=fev.n_sim, n_cache_hits=fev.n_hits,
+                       elapsed_s=time.perf_counter() - t0)
+
+
 def sweep_design_space(space: DesignSpace, driver: str = "exhaustive",
                        backend: str = "numpy", seed: int = 0,
                        **driver_kw) -> SweepResult:
     """Run one driver over every (MCM, fabric) cell and concatenate.
-    The exhaustive driver takes the fused cross-variant path (one
-    batched call per fabric)."""
-    import time
+    Every driver takes a fused cross-variant path: the exhaustive case
+    is one batched call per fabric, the budgeted drivers run their
+    per-cell steppers in lockstep with fused per-round evaluation."""
     if driver == "exhaustive":
         return _sweep_fused(space, backend)
-    run = DRIVERS[driver]
-    t0 = time.perf_counter()
-    parts: List[Tuple[int, str, SearchResult]] = []
-    for ci, (mcm, fabric, grid) in enumerate(space.batches()):
-        ev = BatchedEvaluator(space.workload, mcm, fabric, space.reuse,
-                              backend=backend)
-        kw = dict(driver_kw)
-        kw.setdefault("seed", seed + ci)
-        res = run(ev, grid=grid, **kw)
-        mi = space.mcms.index(mcm)
-        parts.append((mi, fabric, res))
-    elapsed = time.perf_counter() - t0
-    if not parts:
-        empty = StrategyBatch.from_strategies([])
-        return SweepResult(space, empty, np.zeros(0, np.int64),
-                           np.zeros(0, "<U8"),
-                           {f: np.zeros(0) for f in
-                            (*_RESULT_FIELDS, "cost")}, 0, 0, elapsed)
-    batch = StrategyBatch.concat([r.batch for _, _, r in parts])
-    mcm_idx = np.concatenate([np.full(len(r.batch), mi, np.int64)
-                              for mi, _, r in parts])
-    fabric = np.concatenate([np.full(len(r.batch), fb)
-                             for _, fb, r in parts])
-    metrics = {f: np.concatenate([r.metrics[f] for _, _, r in parts])
-               for f in (*_RESULT_FIELDS, "cost")}
-    return SweepResult(space, batch, mcm_idx, fabric, metrics,
-                       n_sim=sum(r.n_sim for _, _, r in parts),
-                       n_cache_hits=sum(r.n_cache_hits for _, _, r in parts),
-                       elapsed_s=elapsed)
+    if driver not in _STEPPERS:
+        raise KeyError(f"unknown driver {driver!r}; known: "
+                       f"{['exhaustive', *sorted(_STEPPERS)]}")
+    return _sweep_with_driver(space, driver, backend, seed, **driver_kw)
 
 
-def refine_top_points(sweep: SweepResult, top_k: int = 8):
-    """Re-evaluate the best sweep points through the scalar oracle —
-    derives real OI topologies and exact (OCS-inclusive) costs.
-    Returns core.optimizer.DesignPoint objects, best-first."""
-    from repro.core.optimizer import evaluate_point   # lazy: no cycle
+# ---------------------------------------------------------------------------
+# Refinement: exact topologies + OCS-inclusive costs for the winners
+# ---------------------------------------------------------------------------
+def refine_top_points(sweep: SweepResult, top_k: int = 8,
+                      method: str = "batched"):
+    """Re-evaluate the best sweep points with real OI topologies and
+    exact (OCS-inclusive) costs.  Returns ``core.optimizer.DesignPoint``
+    objects, best-first.
+
+    ``method="batched"`` (default) derives everything vectorized: one
+    ``batched_simulate`` over all top-K rows per fabric plus the
+    memoized ``derive_physical`` front-end.  ``method="scalar"`` is the
+    original per-point ``evaluate_point`` loop, kept as the parity
+    reference (same points, same topologies, metrics to 1e-9)."""
     feas = np.nonzero(sweep.metrics["feasible"])[0]
     order = feas[np.argsort(-sweep.metrics["throughput"][feas])][:top_k]
+    if method == "scalar":
+        out = _refine_scalar(sweep, order)
+    elif method == "batched":
+        out = _refine_batched(sweep, order)
+    else:
+        raise ValueError(f"unknown refine method {method!r}; "
+                         f"use 'batched' or 'scalar'")
+    out.sort(key=lambda p: -p.throughput)
+    return out
+
+
+def _refine_scalar(sweep: SweepResult, order: np.ndarray) -> List:
+    from repro.core.optimizer import evaluate_point   # lazy: no cycle
     out = []
     for i in order:
         mcm = sweep.space.mcms[int(sweep.mcm_idx[i])]
@@ -401,5 +703,176 @@ def refine_top_points(sweep: SweepResult, top_k: int = 8):
                             reuse=sweep.space.reuse)
         if pt is not None:
             out.append(pt)
-    out.sort(key=lambda p: -p.throughput)
+    return out
+
+
+_SIM_COLS = ("feasible", "step_time", "throughput", "mfu", "t_comp",
+             "t_mem", "t_coll", "exposed", "dp_exposed", "bubble",
+             "reuse_active")
+
+
+def _refine_batched(sweep: SweepResult, order: np.ndarray) -> List:
+    """Vectorized refinement of the given sweep rows.
+
+    Mirrors ``core.optimizer.evaluate_point`` per row: traffic, reuse
+    pair, link allocation and the simulator terms come from the batched
+    engine (one call per fabric, heterogeneous MCMs via ``MCMBatch``);
+    physical-rail derivation goes through the memoized
+    ``derive_physical`` front-end; rows whose reuse-pair topology is
+    underivable fall back to the no-reuse allocation (second batched
+    call), and rows with no derivable topology at all are dropped —
+    exactly the scalar semantics."""
+    from repro.core.network import derive_physical_batch  # lazy: no cycle
+    from repro.dse.batched_sim import (allocate_links_batch,
+                                       map_intra_batch, pick_reuse_pairs,
+                                       traffic_volumes_batch)
+    w = sweep.space.workload
+    out: List = []
+    if not len(order):
+        return out
+    fabs = [str(f) for f in np.asarray(sweep.fabric)[order]]
+    hws = [sweep.space.mcms[int(sweep.mcm_idx[i])].hw for i in order]
+    groups: Dict[Tuple[str, int], List[int]] = {}
+    for i, (f, h) in enumerate(zip(fabs, hws)):   # per (fabric, hw) —
+        groups.setdefault((f, id(h)), []).append(i)   # hw may vary in a
+    for (fabric, _), posns in groups.items():         # hand-built space
+        rows = order[posns]
+        K = len(rows)
+        sub = sweep.batch.take(rows)
+        midx = np.asarray(sweep.mcm_idx[rows], np.int64)
+        mcms = [sweep.space.mcms[int(i)] for i in midx]
+        hw = hws[posns[0]]
+        mb = MCMBatch.from_mcms(sweep.space.mcms, midx)
+        res = batched_simulate(w, sub, mb, fabric=fabric,
+                               reuse=sweep.space.reuse, hw=hw)
+        cols = {f: np.array(getattr(res, f), copy=True)
+                for f in _SIM_COLS}
+
+        _, intra, inter = map_intra_batch(sub, mb)
+        vols = traffic_volumes_batch(w, sub)
+        inter_mask = (inter > 1) & (vols > 0)
+        topos: List = [None] * K
+        degs: List[Dict[str, int]] = [{} for _ in range(K)]
+        if fabric == "oi":
+            if sweep.space.reuse:
+                pa, pb = pick_reuse_pairs(vols, inter_mask)
+            else:
+                pa = pb = np.full(K, -1, np.int64)
+            alloc = allocate_links_batch(vols, inter_mask, mb.total_links,
+                                         pa, pb)
+            degs, allocs, pairs = _topo_inputs(inter, inter_mask, alloc,
+                                               pa, pb)
+            topos = derive_physical_batch(list(zip(degs, allocs, pairs)),
+                                          mcms, hw)
+            # reuse-pair derivation failures: no-reuse allocation + sim
+            fb_rows = np.array([k for k in range(K)
+                                if topos[k] is None
+                                and pairs[k] is not None], np.int64)
+            if len(fb_rows):
+                mb_fb = mb.take(fb_rows)
+                none_pair = np.full(len(fb_rows), -1, np.int64)
+                alloc_nr = allocate_links_batch(
+                    vols[fb_rows], inter_mask[fb_rows], mb_fb.total_links,
+                    none_pair, none_pair)
+                d_fb, a_fb, p_fb = _topo_inputs(
+                    inter[fb_rows], inter_mask[fb_rows], alloc_nr,
+                    none_pair, none_pair)
+                t_fb = derive_physical_batch(
+                    list(zip(d_fb, a_fb, p_fb)),
+                    [mcms[int(k)] for k in fb_rows], hw)
+                res_nr = batched_simulate(w, sub.take(fb_rows), mb_fb,
+                                          fabric=fabric, reuse=False,
+                                          hw=hw)
+                for j, k in enumerate(fb_rows):
+                    topos[int(k)] = t_fb[j]
+                for f in _SIM_COLS:
+                    cols[f][fb_rows] = np.asarray(getattr(res_nr, f))
+
+        out.extend(_assemble_points(w, sub, mb, cols, fabric, hw, mcms,
+                                    topos, degs, intra, vols, inter_mask))
+    return out
+
+
+def _topo_inputs(inter: np.ndarray, inter_mask: np.ndarray,
+                 alloc: np.ndarray, pa: np.ndarray, pb: np.ndarray
+                 ) -> Tuple[List[Dict[str, int]], List[Dict[str, int]],
+                            List[Optional[Tuple[str, str]]]]:
+    """Per-row (inter degrees, link alloc, reuse pair) dicts, with keys
+    in the scalar path's insertion order (``map_intra``'s inter dict:
+    DP, PP, CP, EP) so memoized derivation tie-breaks identically."""
+    K = inter.shape[0]
+    inter_l = inter.tolist()
+    mask_l = inter_mask.tolist()
+    alloc_l = alloc.tolist()
+    degs, allocs, pairs = [], [], []
+    cols = [(p, P_IDX[p]) for p in ("DP", "PP", "CP", "EP")]
+    for k in range(K):
+        degs.append({p: int(inter_l[k][j]) for p, j in cols
+                     if inter_l[k][j] > 1})
+        allocs.append({p: int(alloc_l[k][j]) for p, j in cols
+                       if mask_l[k][j]})
+        pairs.append((P_ORDER[pa[k]], P_ORDER[pb[k]])
+                     if pa[k] >= 0 else None)
+    return degs, allocs, pairs
+
+
+def _assemble_points(w, sub, mb, cols, fabric, hw, mcms, topos, degs,
+                     intra, vols, inter_mask) -> List:
+    """Build scalar ``DesignPoint``s from the batched refinement arrays
+    (breakdown / bottleneck / logs mirror ``core.simulator.simulate``)."""
+    from repro.core.optimizer import DesignPoint      # lazy: no cycle
+    from repro.core.simulator import SimResult
+    from repro.dse.batched_sim import gemm_eff_batch, hbm_demand_batch
+    K = len(sub)
+    step = cols["step_time"]
+    t_comp, t_mem, t_coll = cols["t_comp"], cols["t_mem"], cols["t_coll"]
+    exposed, dp_exposed = cols["exposed"], cols["dp_exposed"]
+    with np.errstate(invalid="ignore"):
+        util = np.where(cols["feasible"], t_comp / step, 0.0)
+    eff = gemm_eff_batch(w, sub, hw) if hw.model_gemm_eff \
+        else np.ones(K)
+    demand, _ = hbm_demand_batch(w, sub)      # same exprs as the gate
+    mem_pressure = demand / np.broadcast_to(
+        np.asarray(mb.hbm_capacity, np.float64), (K,))
+
+    strategies = sub.to_strategies()
+    out = []
+    for k in range(K):
+        if not cols["feasible"][k]:
+            continue
+        if topos[k] is None and degs[k]:
+            continue                       # no derivable physical rails
+        # collective-term key order mirrors simulate(): intra dict
+        # order (TP, the packed group, DP) then inter_vols (DP/PP/CP/EP)
+        order_p = [p for p in ("TP", "CP", "EP", "PP", "DP")
+                   if intra[k, P_IDX[p]] > 1 and vols[k, P_IDX[p]] > 0]
+        order_p += [p for p in ("DP", "PP", "CP", "EP")
+                    if inter_mask[k, P_IDX[p]] and p not in order_p]
+        terms = {"compute": float(t_comp[k]), "memory": float(t_mem[k]),
+                 **{f"coll_{p}": float(t_coll[k, P_IDX[p]])
+                    for p in order_p}}
+        nop_bound = any((p == "TP" or intra[k, P_IDX[p]] > 1)
+                        and t_coll[k, P_IDX[p]] > t_comp[k]
+                        for p in P_ORDER)
+        logs = {
+            "compute_util": float(util[k]),
+            "gemm_eff": float(eff[k]),
+            "mem_pressure": float(mem_pressure[k]),
+            "exposed_comm": float(exposed[k] + dp_exposed[k]),
+            "bubble": float(cols["bubble"][k]),
+            "reuse_active": float(cols["reuse_active"][k]),
+            "nop_bound": float(nop_bound),
+            "oi_bound": float(fabric == "oi"
+                              and exposed[k] + dp_exposed[k]
+                              > 0.3 * step[k]),
+            "hbm_bw_bound": float(t_mem[k] > t_comp[k]),
+        }
+        sim = SimResult(True, step_time=float(step[k]),
+                        throughput=float(cols["throughput"][k]),
+                        mfu=float(cols["mfu"][k]), breakdown=terms,
+                        bottleneck=max(terms, key=terms.get), logs=logs)
+        cost = cluster_cost(mcms[k], topos[k], fabric=fabric, hw=hw).total
+        out.append(DesignPoint(strategy=strategies[k], mcm=mcms[k],
+                               topo=topos[k], sim=sim, cost=cost,
+                               fabric=fabric))
     return out

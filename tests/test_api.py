@@ -195,6 +195,32 @@ def test_record_sources_and_pareto():
     assert set(res.pareto) == set(res.pareto_indices())
 
 
+def test_records_from_sweep_columnar_matches_single_row_adapter():
+    from repro.api import record_from_sweep, records_from_sweep
+    from repro.dse.search import sweep_design_space
+    sc = Scenario(**TINY)
+    sweep = sweep_design_space(sc.design_space())
+    idx = list(range(0, len(sweep), max(len(sweep) // 50, 1)))
+    recs = records_from_sweep(sweep, idx)
+    assert [r.to_dict() for r in recs] == \
+        [record_from_sweep(sweep, i).to_dict() for i in idx]
+    assert records_from_sweep(sweep, []) == []
+
+
+def test_sweep_keep_indices_unique_and_pareto_complete():
+    import numpy as np
+    from repro.api.study import _sweep_keep_indices
+    from repro.dse.search import sweep_design_space
+    sc = Scenario(**{**TINY, "keep_top": 4})
+    sweep = sweep_design_space(sc.design_space())
+    kept = _sweep_keep_indices(sweep, sc)
+    assert len(set(int(i) for i in kept)) == len(kept)   # no duplicates
+    pareto = set(int(i) for i in sweep.pareto_indices())
+    assert pareto <= set(int(i) for i in kept)           # front retained
+    order = np.argsort(-sweep.metrics["throughput"][kept[:4]])
+    assert np.array_equal(order, np.arange(4))           # top-N first
+
+
 def test_record_from_search_adapter_matches_cell():
     from repro.api import record_from_search
     from repro.dse.search import BatchedEvaluator, search_exhaustive

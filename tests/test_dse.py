@@ -241,6 +241,282 @@ def test_drivers_and_cache():
     assert ev.n_sim == n and ev.n_hits >= len(again.batch)
 
 
+# ---------------------------------------------------------------------------
+# Vectorized evaluation cache
+# ---------------------------------------------------------------------------
+def test_evaluator_cache_vectorized_hits_and_values():
+    mcm = mcm_from_compute(2e6, dies_per_mcm=16, m=6)
+    ev = BatchedEvaluator(W, mcm)
+    grid = enumerate_strategy_batch(W, mcm)
+    half = grid.take(np.arange(len(grid) // 2))
+    m1 = ev.evaluate(half)
+    assert ev.n_sim == len(half) and ev.n_hits == 0
+    m2 = ev.evaluate(grid)                    # first half must be hits
+    assert ev.n_hits == len(half)
+    assert ev.n_sim == len(grid)
+    for k in m1:
+        np.testing.assert_array_equal(m2[k][: len(half)], m1[k])
+    # duplicate rows inside one batch resolve consistently
+    dup = grid.take(np.array([0, 0, 1, 1, 0]))
+    m3 = ev.evaluate(dup)
+    assert m3["step_time"][0] == m3["step_time"][1] == m3["step_time"][4]
+
+
+def test_evaluator_cache_falls_back_on_unpackable_degrees():
+    mcm = mcm_from_compute(2e6, dies_per_mcm=16, m=6)
+    ev = BatchedEvaluator(W, mcm)
+    huge = StrategyBatch(*(np.full(4, 1 << 11, np.int64)
+                           for _ in range(6)))
+    m1 = ev.evaluate(huge)                    # 6 x 12 bits > 64 -> dict
+    assert ev._fallback is not None
+    assert not m1["feasible"].any()
+    m2 = ev.evaluate(huge)
+    assert ev.n_hits >= len(huge)             # still caches correctly
+    np.testing.assert_array_equal(m1["step_time"], m2["step_time"])
+
+
+def test_evaluator_cache_repacks_when_widths_grow():
+    mcm = mcm_from_compute(2e6, dies_per_mcm=16, m=6)
+    ev = BatchedEvaluator(W, mcm)
+    grid = enumerate_strategy_batch(W, mcm)
+    small = grid.take(np.arange(8))
+    ev.evaluate(small)
+    wide = StrategyBatch(np.array([4096]), np.array([1]), np.array([1]),
+                         np.array([1]), np.array([1]), np.array([1]))
+    ev.evaluate(wide)                         # forces width growth+repack
+    n = ev.n_sim
+    m = ev.evaluate(small)                    # old keys still hit
+    assert ev.n_sim == n
+    assert len(m["step_time"]) == len(small)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-cell driving == per-cell driving
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("driver,kw", [
+    ("random", {"budget": 24}),
+    ("prf", {"budget": 24}),
+    ("nsga2", {"pop_size": 10, "generations": 2}),
+])
+def test_sweep_fused_driver_matches_per_cell(driver, kw):
+    from repro.dse.search import DRIVERS
+    space = DesignSpace.from_compute(TINY, 1e6, fabrics=("oi", "ib"),
+                                     m=(2, 6), cpo_ratio=(0.6,))
+    sweep = sweep_design_space(space, driver=driver, seed=3, **kw)
+    run = DRIVERS[driver]
+    pos = {id(m): i for i, m in enumerate(space.mcms)}
+    tp, thpt, cost, mi, fb = [], [], [], [], []
+    for ci, (mcm, fabric, grid) in enumerate(space.batches()):
+        ev = BatchedEvaluator(space.workload, mcm, fabric, space.reuse)
+        res = run(ev, grid=grid, seed=3 + ci, **kw)
+        tp.append(res.batch.tp)
+        thpt.append(res.metrics["throughput"])
+        cost.append(res.metrics["cost"])
+        mi.append(np.full(len(res.batch), pos[id(mcm)]))
+        fb.append(np.full(len(res.batch), fabric))
+    assert np.array_equal(sweep.batch.tp, np.concatenate(tp))
+    assert np.array_equal(sweep.metrics["throughput"],
+                          np.concatenate(thpt))
+    assert np.array_equal(sweep.metrics["cost"], np.concatenate(cost))
+    assert np.array_equal(sweep.mcm_idx, np.concatenate(mi))
+    assert np.array_equal(sweep.fabric, np.concatenate(fb))
+
+
+def test_fused_paths_respect_per_mcm_hw():
+    """A hand-built DesignSpace may mix HW configs across MCM variants;
+    fused sweeps and batched refinement must simulate each cell with
+    ITS hw, not the first cell's."""
+    import dataclasses as dc
+    from repro.dse.search import refine_top_points
+    m1 = mcm_from_compute(1e6, dies_per_mcm=16, m=6)
+    hw2 = dc.replace(m1.hw, mfu_ceiling=m1.hw.mfu_ceiling / 2)
+    m2 = dc.replace(mcm_from_compute(1e6, dies_per_mcm=16, m=2), hw=hw2)
+    space = DesignSpace(workload=TINY, mcms=(m1, m2), fabrics=("oi",))
+    for driver, kw in (("exhaustive", {}), ("random", {"budget": 16})):
+        sweep = sweep_design_space(space, driver=driver, **kw)
+        for i in (0, len(sweep) - 1):
+            s = sweep.batch.take(np.array([i])).to_strategies()[0]
+            mcm = space.mcms[int(sweep.mcm_idx[i])]
+            r = simulate(TINY, s, mcm, fabric="oi", topo=None,
+                         hw=mcm.hw)
+            assert bool(sweep.metrics["feasible"][i]) == r.feasible
+            if r.feasible:
+                assert sweep.metrics["step_time"][i] == pytest.approx(
+                    r.step_time, rel=1e-9)
+    sweep = sweep_design_space(space)
+    got = refine_top_points(sweep, top_k=12)
+    want = refine_top_points(sweep, top_k=12, method="scalar")
+    assert [p.strategy for p in got] == [p.strategy for p in want]
+    for pg, pw in zip(got, want):
+        assert pg.throughput == pytest.approx(pw.throughput, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Batched refinement == scalar oracle (dense + MoE presets)
+# ---------------------------------------------------------------------------
+def _assert_refine_parity(space, top_k):
+    from repro.dse.search import refine_top_points
+    sweep = sweep_design_space(space)
+    batched = refine_top_points(sweep, top_k=top_k)
+    scalar = refine_top_points(sweep, top_k=top_k, method="scalar")
+    assert len(batched) == len(scalar) > 0
+    for pb, ps in zip(batched, scalar):
+        assert pb.strategy == ps.strategy          # identical ranking
+        assert pb.mcm == ps.mcm and pb.fabric == ps.fabric
+        assert pb.throughput == pytest.approx(ps.throughput, rel=1e-9)
+        assert pb.cost == pytest.approx(ps.cost, rel=1e-9)
+        assert pb.sim.step_time == pytest.approx(ps.sim.step_time,
+                                                 rel=1e-9)
+        assert pb.sim.mfu == pytest.approx(ps.sim.mfu, rel=1e-9)
+        if ps.topo is None:
+            assert pb.topo is None
+        else:
+            assert pb.topo.dims == ps.topo.dims
+            assert pb.topo.mapping == ps.topo.mapping
+            assert dict(pb.topo.link_alloc) == dict(ps.topo.link_alloc)
+            assert pb.topo.reuse_pair == ps.topo.reuse_pair
+        assert pb.sim.bottleneck == ps.sim.bottleneck
+        assert set(pb.sim.breakdown) == set(ps.sim.breakdown)
+        for k, v in ps.sim.logs.items():
+            assert pb.sim.logs[k] == pytest.approx(v, rel=1e-9, abs=0.0), k
+    return batched
+
+
+def test_refine_batched_matches_scalar_dense():
+    space = DesignSpace.from_compute(TINY, 1e6, fabrics=("oi", "ib"),
+                                     m=(2, 6), cpo_ratio=(0.3, 0.9))
+    _assert_refine_parity(space, top_k=24)
+
+
+def test_refine_batched_matches_scalar_moe():
+    space = DesignSpace.from_compute(W, 4e6, fabrics=("oi",),
+                                     dies_per_mcm=(8, 16), m=(4, 6),
+                                     cpo_ratio=(0.6,))
+    pts = _assert_refine_parity(space, top_k=24)
+    # refined OI points carry a derived physical topology
+    assert any(p.topo is not None and p.topo.dims for p in pts)
+
+
+def test_refine_board_power_matches_scalar_records():
+    from repro.api import record_from_point
+    from repro.dse.search import refine_top_points
+    space = DesignSpace.from_compute(TINY, 1e6, fabrics=("oi",),
+                                     m=(2, 6), cpo_ratio=(0.6,))
+    sweep = sweep_design_space(space)
+    recs_b = [record_from_point(p)
+              for p in refine_top_points(sweep, top_k=8)]
+    recs_s = [record_from_point(p)
+              for p in refine_top_points(sweep, top_k=8,
+                                         method="scalar")]
+    for rb, rs in zip(recs_b, recs_s):
+        for k in ("throughput", "cost", "power"):
+            assert rb.metrics[k] == pytest.approx(rs.metrics[k],
+                                                  rel=1e-9), k
+
+
+def test_refine_rejects_unknown_method():
+    from repro.dse.search import refine_top_points
+    space = DesignSpace.from_compute(TINY, 1e6, fabrics=("oi",),
+                                     m=(6,), cpo_ratio=(0.6,))
+    sweep = sweep_design_space(space)
+    with pytest.raises(ValueError, match="refine method"):
+        refine_top_points(sweep, top_k=2, method="quantum")
+
+
+# ---------------------------------------------------------------------------
+# JAX backend: bucketed jit cache + auto resolution
+# ---------------------------------------------------------------------------
+def test_jax_backend_parity_all_fabrics_and_fused():
+    mcm = mcm_from_compute(2e6, dies_per_mcm=16, m=6)
+    batch = enumerate_strategy_batch(W, mcm)
+    for fabric in ("oi", "ib", "nvlink"):
+        rn = batched_simulate(W, batch, mcm, fabric=fabric,
+                              backend="numpy")
+        rj = batched_simulate(W, batch, mcm, fabric=fabric,
+                              backend="jax")
+        assert np.array_equal(rn.feasible, rj.feasible)
+        ok = rn.feasible
+        np.testing.assert_allclose(rj.step_time[ok], rn.step_time[ok],
+                                   rtol=1e-9)
+        np.testing.assert_allclose(rj.power[ok], rn.power[ok], rtol=1e-9)
+    # heterogeneous MCMBatch through the jax path
+    space = DesignSpace.from_compute(TINY, 1e6, fabrics=("oi",),
+                                     m=(2, 6), cpo_ratio=(0.3, 0.9))
+    cells = list(space.batches())
+    fused = StrategyBatch.concat([g for _, _, g in cells])
+    local = np.concatenate([np.full(len(g), i, np.int64)
+                            for i, (_, _, g) in enumerate(cells)])
+    mb = MCMBatch.from_mcms([m for m, _, _ in cells], local)
+    hw = cells[0][0].hw
+    rn = batched_simulate(TINY, fused, mb, hw=hw, backend="numpy")
+    rj = batched_simulate(TINY, fused, mb, hw=hw, backend="jax")
+    assert np.array_equal(rn.feasible, rj.feasible)
+    ok = rn.feasible
+    np.testing.assert_allclose(rj.step_time[ok], rn.step_time[ok],
+                               rtol=1e-9)
+    # no-reuse path too
+    rn = batched_simulate(W, batch, mcm, reuse=False, backend="numpy")
+    rj = batched_simulate(W, batch, mcm, reuse=False, backend="jax")
+    np.testing.assert_allclose(rj.step_time[rn.feasible],
+                               rn.step_time[rn.feasible], rtol=1e-9)
+
+
+def test_jax_bucketed_jit_does_not_retrace():
+    from repro.dse import batched_sim as bs
+    mcm = mcm_from_compute(2e6, dies_per_mcm=16, m=6)
+    batch = enumerate_strategy_batch(W, mcm)
+    n0 = len(batch) // 2
+    batched_simulate(W, batch.take(np.arange(n0)), mcm, backend="jax")
+    before = bs._JAX_TRACES["count"]
+    for n in range(n0, n0 + 8):       # same power-of-two bucket
+        batched_simulate(W, batch.take(np.arange(n)), mcm,
+                         backend="jax")
+    assert bs._JAX_TRACES["count"] == before
+
+
+def test_auto_backend_resolution():
+    from repro.dse.batched_sim import JAX_AUTO_MIN_BATCH, resolve_backend
+    assert resolve_backend("numpy", 10 ** 9) == "numpy"
+    assert resolve_backend("jax", 1) == "jax"
+    assert resolve_backend("auto", 4) == "numpy"
+    assert resolve_backend("auto", JAX_AUTO_MIN_BATCH) == "jax"
+    mcm = mcm_from_compute(1e6, dies_per_mcm=16, m=6)
+    batch = enumerate_strategy_batch(TINY, mcm)
+    ra = batched_simulate(TINY, batch, mcm, backend="auto")
+    rn = batched_simulate(TINY, batch, mcm, backend="numpy")
+    ok = rn.feasible
+    np.testing.assert_allclose(ra.step_time[ok], rn.step_time[ok],
+                               rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# pareto_mask: randomized brute-force cross-check
+# ---------------------------------------------------------------------------
+def test_pareto_mask_matches_bruteforce_randomized():
+    rng = np.random.default_rng(11)
+    for _ in range(15):
+        n = int(rng.integers(1, 250))
+        k = int(rng.integers(1, 4))
+        obj = rng.normal(size=(n, k))
+        if n > 20:
+            obj[5:10] = obj[0:5]                 # duplicates
+            obj[10:15, 0] = obj[15:20, 0]        # obj0 ties
+            obj[int(rng.integers(n))] = np.nan
+        maximize = [bool(b) for b in rng.integers(2, size=k)]
+        got = pareto_mask(obj, maximize,
+                          chunk=int(rng.choice([1, 7, 64, 512])))
+        sign = np.where(maximize, 1.0, -1.0)
+        M = obj * sign
+        ok = ~np.isnan(M).any(1)
+        want = ok.copy()
+        for j in range(n):
+            if not want[j]:
+                continue
+            dom = (M >= M[j]).all(1) & (M > M[j]).any(1) & ok
+            want[j] = not dom.any()
+        assert np.array_equal(got, want)
+
+
 def test_inner_search_uses_batched_scan():
     from repro.core.optimizer import inner_search
     mcm = mcm_from_compute(2e6, dies_per_mcm=16, m=6)
