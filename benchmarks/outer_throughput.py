@@ -1,0 +1,160 @@
+"""Outer-search throughput benchmark -> BENCH_outer.json.
+
+Measures ``chiplight-outer`` via ``Study.run()`` on
+``scenarios/paper_qwen3_outer.json``: the batched population path
+(walkers x rounds, fused per-round sweeps, variant cache) against the
+scalar single-walker nested optimiser (``method="scalar",
+inner_method="scalar"`` — the pre-population flow).
+
+Two rates are reported per path:
+
+  * ``points_per_s_sim``       — design points actually SIMULATED per
+                                 wall-second (the raw kernel burn rate);
+  * ``points_per_s_requested`` — design points the outer search asked
+                                 for per wall-second, cache-served
+                                 revisits included.  The scalar walker
+                                 has no variant cache, so its two rates
+                                 coincide; the population's requested
+                                 rate is the one the variant cache (free
+                                 revisits) and the fused per-round
+                                 sweeps buy.  This is the acceptance
+                                 metric (>= 10x the scalar baseline).
+
+    PYTHONPATH=src:. python benchmarks/outer_throughput.py
+    PYTHONPATH=src:. python benchmarks/outer_throughput.py --quick
+
+``--quick`` runs a shrunken tinyllama scenario and exits non-zero if the
+population path regresses below the checked-in floors — the CI smoke
+mode (it never rewrites BENCH_outer.json).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.api import Scenario, Study
+
+REPO = Path(__file__).resolve().parents[1]
+OUT = REPO / "BENCH_outer.json"
+SCENARIO = REPO / "scenarios" / "paper_qwen3_outer.json"
+
+# CI regression floors (quick mode, tinyllama).  Far below a warm
+# laptop-class machine so only a real regression (a per-variant Python
+# loop, a dead cache, re-enumeration per round) trips them.
+QUICK_FLOOR_REQ_PTS_PER_S = 50_000.0
+QUICK_FLOOR_SPEEDUP = 3.0
+
+
+def _run(sc: Scenario, repeats: int = 3) -> dict:
+    study = Study(sc)
+    res = study.run()                                      # warm-up
+    t = res.timings["total_s"]
+    for _ in range(repeats - 1):
+        t = min(t, study.run().timings["total_s"])
+    p = res.provenance
+    n_sim = int(p["n_sim"])
+    n_req = int(p.get("n_requested", n_sim))   # scalar: no cache
+    return {
+        "engine": p["engine"],
+        "rounds": int(p["n_rounds"]),
+        "variants": int(p["n_variants"]),
+        "cache_hits": int(p["n_cache_hits"]),
+        "n_sim": n_sim,
+        "n_requested": n_req,
+        "wall_s": t,
+        "points_per_s_sim": n_sim / t,
+        "points_per_s_requested": n_req / t,
+        "best_throughput_tok_s": res.best_record.throughput
+        if res.best_record else 0.0,
+    }
+
+
+def _scalar_variant(sc: Scenario) -> Scenario:
+    kw = dict(sc.driver_kw)
+    rounds = kw.get("rounds", kw.get("outer_iters", 8))
+    return sc.replace(driver_kw={
+        "method": "scalar", "inner_method": "scalar",
+        "outer_iters": rounds,
+        "inner_budget": kw.get("inner_budget", 48)})
+
+
+def bench(sc: Scenario, repeats: int = 3) -> dict:
+    scalar = _run(_scalar_variant(sc), repeats)
+    pop = _run(sc, repeats)
+    speedup = (pop["points_per_s_requested"]
+               / scalar["points_per_s_requested"])
+    return {"scenario": sc.name, "scalar": scalar, "population": pop,
+            "speedup_requested_pts_per_s": speedup,
+            "best_ratio_pop_over_scalar":
+                (pop["best_throughput_tok_s"]
+                 / scalar["best_throughput_tok_s"])
+                if scalar["best_throughput_tok_s"] else None}
+
+
+def _quick_scenario() -> Scenario:
+    return Scenario(model="tinyllama_1_1b", total_tflops=1e5,
+                    seq_len=4096, global_batch=256, dies_per_mcm=(16,),
+                    m=(6,), cpo_ratio=(0.6,), driver="chiplight-outer",
+                    driver_kw={"rounds": 4, "walkers": 6,
+                               "inner_budget": 16},
+                    keep_top=64, name="tinyllama_outer_quick")
+
+
+def run(quick: bool = False) -> int:
+    sc = _quick_scenario() if quick else Scenario.load(SCENARIO)
+    t0 = time.perf_counter()
+    r = bench(sc)
+    rows = [[r["scenario"], path, d["variants"], d["n_sim"],
+             d["n_requested"], f"{d['wall_s'] * 1e3:.1f}",
+             f"{d['points_per_s_sim']:.0f}",
+             f"{d['points_per_s_requested']:.0f}"]
+            for path, d in (("scalar", r["scalar"]),
+                            ("population", r["population"]))]
+    emit("outer_throughput", rows,
+         ["scenario", "path", "variants", "n_sim", "n_requested",
+          "wall_ms", "pts_per_s_sim", "pts_per_s_requested"])
+    print(f"speedup (requested pts/s): "
+          f"{r['speedup_requested_pts_per_s']:.1f}x   "
+          f"best ratio pop/scalar: "
+          f"{r['best_ratio_pop_over_scalar']:.3f}   "
+          f"({time.perf_counter() - t0:.1f}s)")
+
+    if quick:
+        rc = 0
+        pts = r["population"]["points_per_s_requested"]
+        if pts < QUICK_FLOOR_REQ_PTS_PER_S:
+            print(f"FAIL: population outer path at {pts:,.0f} requested "
+                  f"pts/s, floor {QUICK_FLOOR_REQ_PTS_PER_S:,.0f}")
+            rc = 1
+        if r["speedup_requested_pts_per_s"] < QUICK_FLOOR_SPEEDUP:
+            print(f"FAIL: population/scalar speedup "
+                  f"{r['speedup_requested_pts_per_s']:.1f}x below the "
+                  f"floor of {QUICK_FLOOR_SPEEDUP:.0f}x")
+            rc = 1
+        if rc == 0:
+            print(f"OK: {pts:,.0f} requested pts/s, "
+                  f"{r['speedup_requested_pts_per_s']:.1f}x vs scalar")
+        return rc                       # quick mode never rewrites JSON
+
+    payload = {"bench": "outer_throughput", "results": [r]}
+    OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {OUT}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="shrunken tinyllama scenario + regression "
+                         "floors (CI smoke); does not rewrite "
+                         "BENCH_outer.json")
+    args = ap.parse_args(argv)
+    return run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -63,7 +63,7 @@ def main():
     railx = Study(base.replace(
         driver="railx", dies_per_mcm=(best.mcm.dies_per_mcm,),
         m=(best.mcm.m,), cpo_ratio=(best.mcm.cpo_ratio,), name="railx",
-        driver_kw={"budget": args.budget})).run()
+        driver_kw={}, **budget_kw)).run()   # batched: full-grid sweep
     print(f"  GPU (NVLink+IB):  {t(gpu):.3e} tok/s")
     print(f"  Chiplet+IB:       {t(ib):.3e} tok/s")
     print(f"  RailX:            {t(railx):.3e} tok/s")

@@ -44,10 +44,13 @@ plan = plan_from_design(best)
 print(f"\nJAX deployment plan: mesh {plan.mesh_shape()} "
       f"(TP->model, DP*CP*EP->data), pp={plan.pp}, n_micro={plan.n_micro}")
 
-print("\nouter-search trace (heuristic planner moves):")
+print("\nouter-search trace (population rounds):")
 for t in res.traces:
-    print(f"  iter {t['iter']}: mcm(n,x,y,m,r)={t['mcm']} "
-          f"thpt={t['best_thpt']:.2e} bottleneck={t['bottleneck']}")
+    lead = max(t["walkers"], key=lambda wk: wk["best_thpt"])
+    print(f"  round {t['round']}: {len(t['walkers'])} walkers, "
+          f"{t['n_variants']} variants seen, lead mcm(n,x,y,m,r)="
+          f"{lead['mcm']} thpt={lead['best_thpt']:.2e} "
+          f"bottleneck={lead['bottleneck']}")
 
 path = res.save("artifacts/studies/quickstart.json")
 print(f"\nstudy artifact: {path} "

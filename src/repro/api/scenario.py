@@ -133,12 +133,12 @@ class Scenario:
         return dataclasses.replace(DEFAULT_HW, **self.hw) if self.hw \
             else DEFAULT_HW
 
-    def design_space(self) -> DesignSpace:
+    def design_space(self, alloc_mode: str = "chiplight") -> DesignSpace:
         return DesignSpace.from_compute(
             self.build_workload(), self.total_tflops, fabrics=self.fabrics,
             reuse=self.reuse, hw=self.build_hw(),
             dies_per_mcm=self.dies_per_mcm, m=self.m,
-            cpo_ratio=self.cpo_ratio)
+            cpo_ratio=self.cpo_ratio, alloc_mode=alloc_mode)
 
     def replace(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)

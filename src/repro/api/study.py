@@ -2,10 +2,14 @@
 
 Dispatch goes through the driver registry: batched drivers (exhaustive /
 random / prf / nsga2) take the scan-then-refine path — the vectorized
-``repro.dse`` sweep ranks the whole grid, then the scalar oracle derives
-exact topologies and OCS-inclusive costs for the top points — while
-``chiplight-outer`` and ``railx`` wrap the nested optimiser and the RailX
-baseline.  Every path produces the same ``StudyResult``.
+``repro.dse`` sweep ranks the whole grid, then the vectorized refinement
+derives exact topologies and OCS-inclusive costs for the top points.
+``chiplight-outer`` runs the population-based batched outer search
+(``repro.dse.outer``; ``driver_kw={"method": "scalar"}`` is the legacy
+single-walker nested optimiser), and ``railx`` sweeps the same grids
+under the uniform RailX link split with exact RailX-topology refinement
+(``method="scalar"`` for the legacy loop).  Every path produces the
+same ``StudyResult``.
 """
 from __future__ import annotations
 
@@ -84,11 +88,14 @@ def _batched_driver_kw(sc: Scenario, driver: str) -> dict:
     return kw
 
 
-def _run_batched(sc: Scenario, driver: str) -> StudyResult:
+def _run_batched(sc: Scenario, driver: str,
+                 alloc_mode: str = "chiplight",
+                 engine: Optional[str] = None) -> StudyResult:
     from repro.dse.search import refine_top_points, sweep_design_space
     t0 = time.perf_counter()
-    space = sc.design_space()
-    kw = _batched_driver_kw(sc, driver)
+    space = sc.design_space(alloc_mode=alloc_mode)
+    kw = _batched_driver_kw(sc, driver) if alloc_mode == "chiplight" \
+        else {}
     sweep = sweep_design_space(space, driver=driver, backend=sc.backend,
                                seed=sc.seed, **kw)
     kept = _sweep_keep_indices(sweep, sc)
@@ -110,7 +117,9 @@ def _run_batched(sc: Scenario, driver: str) -> StudyResult:
         traces=[],
         timings={"sweep_s": sweep.elapsed_s,
                  "refine_s": t2 - t1, "total_s": t2 - t0},
-        provenance=_provenance(sc, engine=f"dse.sweep[{driver}]+refine",
+        provenance=_provenance(sc,
+                               engine=engine
+                               or f"dse.sweep[{driver}]+refine",
                                grid_evaluated=len(sweep),
                                n_sim=int(sweep.n_sim),
                                n_cache_hits=int(sweep.n_cache_hits),
@@ -122,10 +131,11 @@ def _run_batched(sc: Scenario, driver: str) -> StudyResult:
 
 
 # ---------------------------------------------------------------------------
-# Scalar drivers: nested ChipLight optimiser / RailX baseline
+# Outer search (population / scalar) + RailX baseline
 # ---------------------------------------------------------------------------
-def _scalar_result(sc: Scenario, pts: List, traces, engine: str,
-                   elapsed: float, **extra_prov) -> StudyResult:
+def _points_result(sc: Scenario, pts: List, traces, engine: str,
+                   elapsed: float, source: str = "scalar",
+                   **extra_prov) -> StudyResult:
     # the outer search revisits MCM variants, re-evaluating identical
     # design points — keep one record per (strategy, mcm, fabric)
     n_raw = len(pts)
@@ -139,7 +149,7 @@ def _scalar_result(sc: Scenario, pts: List, traces, engine: str,
             unique.append(p)
     pts = sorted(unique, key=lambda p: -p.throughput)
     kept = pts if sc.keep_top == 0 else pts[: sc.keep_top]
-    records = [record_from_point(p, source="scalar") for p in kept]
+    records = [record_from_point(p, source=source) for p in kept]
     result = StudyResult(
         scenario=sc, records=records, best=0 if records else None,
         points=kept, traces=list(traces),
@@ -152,8 +162,8 @@ def _scalar_result(sc: Scenario, pts: List, traces, engine: str,
 
 
 def _require_single_cell(sc: Scenario):
-    """Scalar drivers explore FROM one MCM start point (the outer search
-    moves m/cpo itself); a multi-valued grid would be silently dropped,
+    """The outer search explores FROM one MCM start point (it moves
+    dies/m/cpo itself); a multi-valued grid would be silently dropped,
     so reject it instead."""
     multi = [ax for ax in ("dies_per_mcm", "m", "cpo_ratio", "fabrics")
              if len(getattr(sc, ax)) > 1]
@@ -164,36 +174,81 @@ def _require_single_cell(sc: Scenario):
 
 
 def _run_outer(sc: Scenario) -> StudyResult:
-    from repro.core.optimizer import chiplight_optimize
+    """``chiplight-outer``: the batched population search by default;
+    ``driver_kw={"method": "scalar"}`` (implying ``walkers=1``) is the
+    legacy single-walker nested optimiser, bit-identical per seed.  The
+    legacy ``outer_iters`` knob maps onto ``rounds``."""
+    from repro.dse.outer import outer_search
     _require_single_cell(sc)
     kw = dict(sc.driver_kw)
+    method = kw.pop("method", "population")
+    rounds = kw.pop("rounds", kw.pop("outer_iters", 8))
+    walkers = kw.pop("walkers", 1 if method == "scalar" else 8)
+    inner_budget = kw.pop("inner_budget", 48)
+    inner_method = kw.pop("inner_method", "batched")
+    refine_per_variant = kw.pop("refine_per_variant", 8)
+    if kw:
+        raise ValueError(
+            f"driver 'chiplight-outer' does not accept driver_kw "
+            f"{sorted(kw)}; accepted: ['inner_budget', 'inner_method', "
+            f"'method', 'outer_iters', 'refine_per_variant', 'rounds', "
+            f"'walkers']")
+    # knobs that only exist on the OTHER method would be silent no-ops
+    dropped = ("refine_per_variant" if method == "scalar"
+               else "inner_method")
+    if dropped in sc.driver_kw:
+        raise ValueError(f"driver_kw {dropped!r} has no effect with "
+                         f"method={method!r}")
     t0 = time.perf_counter()
-    res = chiplight_optimize(
+    res = outer_search(
         sc.build_workload(), sc.total_tflops,
-        dies_per_mcm=sc.dies_per_mcm[0], m0=sc.m[0],
-        cpo0=sc.cpo_ratio[0],
-        outer_iters=kw.get("outer_iters", 8),
-        inner_budget=kw.get("inner_budget", 48),
+        dies_per_mcm=sc.dies_per_mcm[0], m0=sc.m[0], cpo0=sc.cpo_ratio[0],
+        rounds=rounds, walkers=walkers, inner_budget=inner_budget,
         fabric=sc.fabrics[0], reuse=sc.reuse, hw=sc.build_hw(),
-        seed=sc.seed)
-    return _scalar_result(sc, res.history, res.outer_trace,
-                          "core.chiplight_optimize",
-                          time.perf_counter() - t0)
+        seed=sc.seed, method=method, inner_method=inner_method,
+        refine_per_variant=refine_per_variant, backend=sc.backend)
+    engine = ("core.chiplight_optimize" if method == "scalar"
+              else "dse.outer_search[population]")
+    source = "scalar" if method == "scalar" else "refined"
+    return _points_result(sc, res.history, res.outer_trace, engine,
+                          time.perf_counter() - t0, source=source,
+                          **res.stats)
 
 
 def _run_railx(sc: Scenario) -> StudyResult:
-    from repro.core.mcm import mcm_from_compute
-    from repro.core.optimizer import railx_search
-    _require_single_cell(sc)
+    """``railx``: batched sweep over the SAME grids as the chiplight
+    drivers (``alloc_mode="railx"`` — uniform 50/50 two-rail-dim link
+    split) + exact RailX-topology refinement of the winners;
+    ``driver_kw={"method": "scalar"}`` is the legacy single-cell scalar
+    loop."""
     kw = dict(sc.driver_kw)
-    t0 = time.perf_counter()
-    mcm = mcm_from_compute(sc.total_tflops, sc.dies_per_mcm[0], sc.m[0],
-                           cpo_ratio=sc.cpo_ratio[0], hw=sc.build_hw())
-    _, pts = railx_search(sc.build_workload(), mcm, reuse=sc.reuse,
-                          budget=kw.get("budget", 64), hw=sc.build_hw(),
-                          seed=sc.seed)
-    return _scalar_result(sc, pts, [], "core.railx_search",
-                          time.perf_counter() - t0)
+    method = kw.pop("method", "batched")
+    if method == "scalar":
+        from repro.core.mcm import mcm_from_compute
+        from repro.core.optimizer import railx_search
+        _require_single_cell(sc)
+        budget = kw.pop("budget", 64)
+        if kw:
+            raise ValueError(f"driver 'railx' (scalar) does not accept "
+                             f"driver_kw {sorted(kw)}; accepted: "
+                             f"['budget', 'method']")
+        t0 = time.perf_counter()
+        mcm = mcm_from_compute(sc.total_tflops, sc.dies_per_mcm[0],
+                               sc.m[0], cpo_ratio=sc.cpo_ratio[0],
+                               hw=sc.build_hw())
+        _, pts = railx_search(sc.build_workload(), mcm, reuse=sc.reuse,
+                              budget=budget, hw=sc.build_hw(),
+                              seed=sc.seed)
+        return _points_result(sc, pts, [], "core.railx_search",
+                              time.perf_counter() - t0)
+    if method != "batched":
+        raise ValueError(f"driver 'railx' method must be 'batched' or "
+                         f"'scalar', got {method!r}")
+    if kw:
+        raise ValueError(f"driver 'railx' does not accept driver_kw "
+                         f"{sorted(kw)}; accepted: ['method']")
+    return _run_batched(sc, "exhaustive", alloc_mode="railx",
+                        engine="dse.sweep[railx]+refine")
 
 
 def _provenance(sc: Scenario, **kw) -> dict:

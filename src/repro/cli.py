@@ -129,7 +129,8 @@ def _quick(sc: Scenario) -> Scenario:
     """Smoke-mode shrink: one MCM grid cell, small budgets."""
     kw = dict(sc.driver_kw)
     for k, cap in (("budget", 32), ("generations", 3), ("pop_size", 16),
-                   ("outer_iters", 2), ("inner_budget", 8)):
+                   ("outer_iters", 2), ("inner_budget", 8),
+                   ("rounds", 2), ("walkers", 4)):
         if k in kw:
             kw[k] = min(kw[k], cap)
     if sc.driver in ("random", "prf"):

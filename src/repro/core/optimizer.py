@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core.cost import cluster_cost
 from repro.core.hardware import HW, DEFAULT_HW
-from repro.core.mcm import MCMArch, mcm_from_compute
+from repro.core.mcm import MCMArch
 from repro.core.network import OITopology, RailDim, allocate_links, \
     derive_physical_cached
 from repro.core.simulator import SimResult, map_intra, simulate
@@ -147,16 +147,25 @@ def evaluate_point(w: Workload, s: Strategy, mcm: MCMArch,
 # ---------------------------------------------------------------------------
 def inner_search(w: Workload, mcm: MCMArch, fabric: str = "oi",
                  reuse: bool = True, budget: int = 64,
-                 hw: Optional[HW] = None, seed: int = 0
+                 hw: Optional[HW] = None, seed: int = 0,
+                 method: str = "batched"
                  ) -> Tuple[Optional[DesignPoint], List[DesignPoint]]:
     """Parallel-centric para-topo search; returns (best, evaluated).
 
     The batched engine (repro.dse) scans the ENTIRE strategy grid in one
     vectorized call — no surrogate sampling needed at the strategy level
-    — then the top ``budget`` candidates by batched throughput get the
-    full scalar treatment (physical-topology derivation, exact OCS
-    cost).  ``seed`` is kept for API compatibility; the scan is
-    deterministic.
+    — then the top candidates by batched throughput get the full scalar
+    treatment (physical-topology derivation, exact OCS cost).  The scan
+    is topology-blind, so a candidate can still fail physical-rail
+    derivation; the ranking is walked (bounded at ``4 * budget``) until
+    ``budget`` points survive, rather than returning nothing.
+
+    ``method="batched"`` (default) gives the survivors the scalar
+    treatment vectorized (``repro.dse.search.refine_cell_rows``: one
+    batched call + memoized rail derivation for the whole walk window);
+    ``method="scalar"`` is the original per-point ``evaluate_point``
+    loop, kept as the parity reference.  ``seed`` is kept for API
+    compatibility; both paths are deterministic.
     """
     del seed
     hw = hw or mcm.hw
@@ -170,21 +179,33 @@ def inner_search(w: Workload, mcm: MCMArch, fabric: str = "oi",
     res = batched_simulate(w, batch, mcm, fabric=fabric, reuse=reuse, hw=hw)
     feas = np.nonzero(res.feasible)[0]
     ranked = feas[np.argsort(-res.throughput[feas], kind="stable")]
+    cand = ranked[: budget * 4]
 
-    # walk the ranking until `budget` points survive the scalar pass —
-    # the batched scan is topology-blind, so a candidate can still fail
-    # physical-rail derivation; keep going (bounded, like railx_search)
-    # rather than return nothing.
-    evaluated: List[DesignPoint] = []
-    for i in ranked[: budget * 4]:
-        s = Strategy(tp=int(batch.tp[i]), dp=int(batch.dp[i]),
-                     pp=int(batch.pp[i]), cp=int(batch.cp[i]),
-                     ep=int(batch.ep[i]), n_micro=int(batch.n_micro[i]))
-        pt = evaluate_point(w, s, mcm, fabric, reuse, hw)
-        if pt is not None:
-            evaluated.append(pt)
-            if len(evaluated) >= budget:
-                break
+    if method == "batched":
+        from repro.dse.search import refine_cell_rows
+        # two passes: most candidates survive rail derivation, so refine
+        # one budget's worth first and top up only on a shortfall
+        evaluated = refine_cell_rows(w, mcm, batch, cand[:budget],
+                                     fabric=fabric, reuse=reuse, hw=hw)
+        if len(evaluated) < budget and len(cand) > budget:
+            evaluated += refine_cell_rows(w, mcm, batch, cand[budget:],
+                                          fabric=fabric, reuse=reuse,
+                                          hw=hw)
+            evaluated = evaluated[:budget]
+    elif method == "scalar":
+        evaluated = []
+        for i in cand:
+            s = Strategy(tp=int(batch.tp[i]), dp=int(batch.dp[i]),
+                         pp=int(batch.pp[i]), cp=int(batch.cp[i]),
+                         ep=int(batch.ep[i]), n_micro=int(batch.n_micro[i]))
+            pt = evaluate_point(w, s, mcm, fabric, reuse, hw)
+            if pt is not None:
+                evaluated.append(pt)
+                if len(evaluated) >= budget:
+                    break
+    else:
+        raise ValueError(f"unknown inner_search method {method!r}; "
+                         f"use 'batched' or 'scalar'")
     best = max(evaluated, key=lambda p: p.throughput, default=None)
     return best, evaluated
 
@@ -192,15 +213,18 @@ def inner_search(w: Workload, mcm: MCMArch, fabric: str = "oi",
 # ---------------------------------------------------------------------------
 # Outer search: heuristic planner over MCM architecture
 # ---------------------------------------------------------------------------
-def propose_mcm(cur: MCMArch, best: Optional[DesignPoint],
-                rng: np.random.Generator) -> MCMArch:
-    """Bottleneck-driven move (paper §IV-B-3).  Keeps C ~ constant by
-    moving dies between packages when scale changes."""
-    hw = cur.hw
-    if best is None:
+def propose_moves(cur: MCMArch, logs: Optional[Dict[str, float]],
+                  rng: np.random.Generator) -> List[MCMArch]:
+    """Bottleneck-driven candidate moves (paper §IV-B-3), as a PURE move
+    generator: reads the best point's simulator ``logs`` (None = the
+    inner search found nothing feasible) and returns every architecture
+    the heuristics propose.  Keeps C ~ constant by moving dies between
+    packages when scale changes.  ``rng`` is consumed only by the
+    last-resort random jitter move, in the same order the single-walker
+    planner always used."""
+    if logs is None:
         # infeasible inner search — most often memory capacity: raise m
-        return dataclasses.replace(cur, m=min(cur.m + 2, 16))
-    logs = best.sim.logs
+        return [dataclasses.replace(cur, m=min(cur.m + 2, 16))]
     moves = []
     if logs.get("mem_pressure", 0) > 0.85 or logs.get("hbm_bw_bound"):
         moves.append(dataclasses.replace(cur, m=min(cur.m + 2, 16)))
@@ -224,31 +248,58 @@ def propose_mcm(cur: MCMArch, best: Optional[DesignPoint],
     if not moves:
         moves.append(dataclasses.replace(
             cur, m=int(np.clip(cur.m + rng.integers(-2, 3), 1, 16))))
+    return moves
+
+
+def propose_mcm(cur: MCMArch, best: Optional[DesignPoint],
+                rng: np.random.Generator) -> MCMArch:
+    """Single-walker planner step: generate the bottleneck-driven moves
+    and pick one uniformly (the pre-population behaviour, bit-for-bit:
+    same rng consumption order)."""
+    moves = propose_moves(cur, best.sim.logs if best is not None else None,
+                          rng)
+    if best is None:
+        return moves[0]
     pick = moves[int(rng.integers(len(moves)))]
     return pick if pick.feasible() else cur
 
 
 def _rescale_dies(cur: MCMArch, new_dies: int) -> MCMArch:
+    """Move dies between packages at constant cluster compute.  A target
+    die count that cannot tile ``n_devices`` exactly would silently
+    shrink (or grow) the cluster — reject the move instead (the caller
+    treats the unchanged architecture as a no-op candidate)."""
     total = cur.n_devices
     new_dies = max(1, new_dies)
+    n_mcm = max(int(round(total / new_dies)), 1)
+    if n_mcm * new_dies != total:
+        return cur
     x = int(math.sqrt(new_dies))
     while new_dies % x:
         x -= 1
-    return dataclasses.replace(cur, x=x, y=new_dies // x,
-                               n_mcm=max(total // new_dies, 1))
+    return dataclasses.replace(cur, x=x, y=new_dies // x, n_mcm=n_mcm)
 
 
 # ---------------------------------------------------------------------------
 # Pareto utilities + full nested optimisation
 # ---------------------------------------------------------------------------
 def pareto_front(points: List[DesignPoint]) -> List[DesignPoint]:
-    """Max throughput, min cost."""
-    pts = sorted(points, key=lambda p: (p.cost, -p.throughput))
-    front, best_t = [], -1.0
-    for p in pts:
-        if p.throughput > best_t:
-            front.append(p)
-            best_t = p.throughput
+    """Max throughput, min cost — cost-ascending, one representative per
+    exact (cost, throughput) pair.  The dominance test is the ONE Pareto
+    engine, ``repro.dse.pareto.pareto_mask`` (same semantics the batched
+    sweeps use)."""
+    if not points:
+        return []
+    from repro.dse.pareto import pareto_mask   # lazy: no cycle
+    obj = np.array([[p.throughput, p.cost] for p in points], np.float64)
+    idx = np.nonzero(pareto_mask(obj, [True, False]))[0]
+    idx = sorted(idx, key=lambda i: (points[i].cost, -points[i].throughput))
+    front, seen = [], set()
+    for i in idx:
+        key = (points[i].cost, points[i].throughput)
+        if key not in seen:
+            seen.add(key)
+            front.append(points[i])
     return front
 
 
@@ -258,6 +309,9 @@ class DSEResult:
     frontier: List[DesignPoint]
     history: List[DesignPoint] = field(default_factory=list)
     outer_trace: List[Dict] = field(default_factory=list)
+    # engine bookkeeping (points simulated, cache hits, ...) — filled by
+    # repro.dse.outer; empty for directly-assembled results
+    stats: Dict = field(default_factory=dict)
 
 
 def chiplight_optimize(w: Workload, total_tflops: float,
@@ -265,8 +319,11 @@ def chiplight_optimize(w: Workload, total_tflops: float,
                        outer_iters: int = 8, inner_budget: int = 48,
                        fabric: str = "oi", reuse: bool = True,
                        hw: HW = DEFAULT_HW, seed: int = 0,
-                       cpo0: float = 0.6) -> DSEResult:
-    """Nested outer/inner optimisation (paper §IV-B).
+                       cpo0: float = 0.6,
+                       inner_method: str = "batched") -> DSEResult:
+    """Nested outer/inner optimisation (paper §IV-B) — compatibility
+    wrapper for the single-walker scalar flow, now hosted by
+    ``repro.dse.outer.outer_search(walkers=1, method="scalar")``.
 
     One ``np.random.default_rng(seed)`` drives every ``propose_mcm``
     move (the inner scan is deterministic), so the whole run is
@@ -274,26 +331,13 @@ def chiplight_optimize(w: Workload, total_tflops: float,
     proposed by the LAST planner move is evaluated too — ``outer_trace``
     has ``outer_iters + 1`` entries, one per inner search.
     """
-    rng = np.random.default_rng(seed)
-    mcm = mcm_from_compute(total_tflops, dies_per_mcm, m0,
-                           cpo_ratio=cpo0, hw=hw)
-    all_pts: List[DesignPoint] = []
-    trace = []
-    for it in range(outer_iters + 1):
-        best, pts = inner_search(w, mcm, fabric=fabric, reuse=reuse,
-                                 budget=inner_budget, hw=hw)
-        all_pts.extend(pts)
-        trace.append({
-            "iter": it, "mcm": (mcm.n_mcm, mcm.x, mcm.y, mcm.m,
-                                mcm.cpo_ratio),
-            "best_thpt": best.throughput if best else 0.0,
-            "bottleneck": best.sim.bottleneck if best else "none",
-        })
-        if it < outer_iters:
-            mcm = propose_mcm(mcm, best, rng)
-    best = max(all_pts, key=lambda p: p.throughput, default=None)
-    return DSEResult(best=best, frontier=pareto_front(all_pts),
-                     history=all_pts, outer_trace=trace)
+    from repro.dse.outer import outer_search   # lazy: no cycle
+    return outer_search(w, total_tflops, dies_per_mcm=dies_per_mcm,
+                        m0=m0, rounds=outer_iters,
+                        inner_budget=inner_budget, walkers=1,
+                        fabric=fabric, reuse=reuse, hw=hw, seed=seed,
+                        cpo0=cpo0, method="scalar",
+                        inner_method=inner_method)
 
 
 # ---------------------------------------------------------------------------
@@ -373,34 +417,47 @@ def railx_topology(mcm: MCMArch, inter_degrees: Dict[str, int],
     return best
 
 
+def railx_evaluate_point(w: Workload, s: Strategy, mcm: MCMArch,
+                         reuse: bool = True, hw: HW = DEFAULT_HW
+                         ) -> Optional[DesignPoint]:
+    """One design point on the RailX network: derive the uniform two-dim
+    rail topology and simulate with its link allocation (the railx
+    analogue of ``evaluate_point``; also the refinement oracle for the
+    batched railx sweep)."""
+    mapping = map_intra(w, s, mcm)
+    if mapping is None:
+        return None
+    intra, inter = mapping
+    vols = traffic_volumes(w, s)
+    inter_vols = {p: vols[p] for p, d in inter.items()
+                  if d > 1 and vols[p] > 0}
+    rp = None
+    if reuse:
+        prs = [pr for pr in reusable_pairs(w, s)
+               if pr[0] in inter_vols and pr[1] in inter_vols]
+        rp = prs[0] if prs else None
+    inter_deg = {p: d for p, d in inter.items() if d > 1}
+    topo = railx_topology(mcm, inter_deg, inter_vols, reuse_pair=rp, hw=hw)
+    if topo is None and inter_deg:
+        return None
+    sim = simulate(w, s, mcm, fabric="oi", topo=topo, reuse=reuse, hw=hw)
+    if not sim.feasible:
+        return None
+    cost = cluster_cost(mcm, topo, fabric="oi", hw=hw).total
+    return DesignPoint(s, mcm, topo, sim, cost)
+
+
 def railx_search(w: Workload, mcm: MCMArch, reuse: bool = True,
                  budget: int = 64, hw: HW = DEFAULT_HW, seed: int = 0
                  ) -> Tuple[Optional[DesignPoint], List[DesignPoint]]:
-    """Best strategy on the RailX network (fair comparison: same budget)."""
+    """Best strategy on the RailX network (fair comparison: same budget).
+
+    The scalar reference loop; the batched engine sweeps the same grids
+    at array speed via ``sweep_design_space(alloc_mode="railx")``."""
     evaluated = []
     for s in enumerate_strategies(w, mcm)[: budget * 4]:
-        mapping = map_intra(w, s, mcm)
-        if mapping is None:
-            continue
-        intra, inter = mapping
-        vols = traffic_volumes(w, s)
-        inter_vols = {p: vols[p] for p, d in inter.items()
-                      if d > 1 and vols[p] > 0}
-        rp = None
-        if reuse:
-            prs = [pr for pr in reusable_pairs(w, s)
-                   if pr[0] in inter_vols and pr[1] in inter_vols]
-            rp = prs[0] if prs else None
-        inter_deg = {p: d for p, d in inter.items() if d > 1}
-        topo = railx_topology(mcm, inter_deg, inter_vols, reuse_pair=rp,
-                              hw=hw)
-        if topo is None and inter_deg:
-            continue
-        sim = simulate(w, s, mcm, fabric="oi", topo=topo, reuse=reuse,
-                       hw=hw)
-        if not sim.feasible:
-            continue
-        cost = cluster_cost(mcm, topo, fabric="oi", hw=hw).total
-        evaluated.append(DesignPoint(s, mcm, topo, sim, cost))
+        pt = railx_evaluate_point(w, s, mcm, reuse=reuse, hw=hw)
+        if pt is not None:
+            evaluated.append(pt)
     best = max(evaluated, key=lambda p: p.throughput, default=None)
     return best, evaluated

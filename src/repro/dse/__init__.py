@@ -3,15 +3,20 @@
 # SoA port of core.simulator.simulate; the scalar simulator is the oracle.
 from repro.dse.space import (DesignSpace, StrategyBatch, FABRICS,  # noqa: F401
                              P_ORDER, P_IDX, enumerate_mcm_grid,
+                             enumerate_space_batch,
                              enumerate_strategy_batch)
 from repro.dse.batched_sim import (BatchedSimResult,  # noqa: F401
                                    batched_simulate, map_intra_batch,
                                    traffic_volumes_batch,
-                                   allocate_links_batch)
+                                   allocate_links_batch,
+                                   allocate_links_railx_batch)
 from repro.dse.pareto import (crowding_distance, nondominated_sort,  # noqa: F401
                               pareto_front_indices, pareto_mask)
 from repro.dse.search import (DRIVERS, BatchedEvaluator,  # noqa: F401
-                              SearchResult, SweepResult, refine_top_points,
+                              SearchResult, SweepResult, refine_cell_rows,
+                              refine_sweep_rows, refine_top_points,
                               search_exhaustive, search_nsga2,
                               search_prf_ucb, search_random,
                               sweep_design_space)
+from repro.dse.outer import (VariantEval, mcm_variant_key,  # noqa: F401
+                             outer_search)

@@ -377,6 +377,122 @@ def allocate_links_batch(vols: np.ndarray, inter_mask: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# RailX allocation variant (port of optimizer.railx_topology's link split)
+# ---------------------------------------------------------------------------
+# inter-parallelism columns in the scalar ``ps`` order (map_intra's inter
+# dict: DP, PP, CP, EP) — P_ORDER[1:], so pair indices map via ``- 1``
+_RAILX_COLS = ("DP", "PP", "CP", "EP")
+
+
+def allocate_links_railx_batch(vols: np.ndarray, inter: np.ndarray,
+                               inter_mask: np.ndarray, total_links,
+                               pair_a: np.ndarray, pair_b: np.ndarray,
+                               ocs_ports: int
+                               ) -> Tuple[np.ndarray, np.ndarray,
+                                          np.ndarray]:
+    """RailX link allocation: at most TWO rail dimensions with UNIFORM
+    budgets (``L // 2`` each), parallelism groups packed onto the dims by
+    the fewest-OCS split (the grouping search of
+    ``core.optimizer.railx_topology``, vectorized over the 15 subset
+    masks of the four inter parallelisms), links within a dim split
+    traffic-proportionally.  Returns ``(alloc (B, 5), pair_shared (B,),
+    derivable (B,))``: ``pair_shared`` marks rows whose reuse pair landed
+    on ONE dim (only then can the pair share links), ``derivable`` rows
+    with a valid grouping (scan-level signal; refinement re-derives the
+    exact topology and drops the rest).  Undervisable-but-active rows get
+    a best-effort single-dim split so the scan still ranks them."""
+    B = vols.shape[0]
+    rows = np.arange(B)
+    cols = np.array([P_IDX[p] for p in _RAILX_COLS])
+    deg4 = inter[:, cols].astype(np.int64)
+    act = deg4 > 1                      # group membership is by DEGREE
+    vols4 = vols[:, cols]
+    # members with degree > 1 but zero traffic exist in the dim but are
+    # outside inter_vols — the scalar code gives them the 1-link floor
+    L = np.broadcast_to(np.asarray(total_links, np.int64), (B,))
+    l_half = np.maximum(L // 2, 1).astype(np.float64)
+
+    big = np.iinfo(np.int64).max
+    best_ocs = np.full(B, big)
+    best_mask = np.zeros(B, np.int64)
+    for mask in range(1, 16):
+        bits = np.array([(mask >> i) & 1 for i in range(4)], bool)
+        g1 = act & bits
+        g2 = act & ~bits
+        valid = ~(bits & ~act).any(1) & g1.any(1)
+        n1 = np.where(g1, deg4, 1).prod(1)
+        n2 = np.where(g2, deg4, 1).prod(1)
+        has2 = g2.any(1)
+        # k_i = ceil(n_i / P) passes validate() only at k == 1
+        valid &= n1 <= ocs_ports
+        valid &= ~has2 | (n2 <= ocs_ports)
+        valid &= ~has2 | (2 * l_half <= L)       # sum(R_i) <= L
+        ocs = np.where(has2, (n1 + n2) * l_half.astype(np.int64),
+                       l_half.astype(np.int64))
+        better = valid & (ocs < best_ocs)
+        best_ocs = np.where(better, ocs, best_ocs)
+        best_mask = np.where(better, mask, best_mask)
+
+    n_act = act.sum(1)
+    derivable = (best_ocs < big) | (n_act == 0)
+    # best-effort fallback for underivable active rows: one dim, all ps
+    best_mask = np.where((n_act > 0) & ~derivable, 15, best_mask)
+
+    bits1 = ((best_mask[:, None] >> np.arange(4)[None, :]) & 1) > 0
+    g1 = act & bits1
+    g2 = act & ~bits1
+
+    has_pair = (pair_a >= 0)
+    pa = np.where(has_pair, pair_a - 1, 0)       # P_ORDER index -> col4
+    pb = np.where(has_pair, pair_b - 1, 0)
+    pair_slots = np.zeros_like(act)
+    pair_slots[rows, pa] = has_pair
+    pair_slots[rows, pb] |= has_pair
+
+    def dim_alloc(grp: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(alloc4 (B, 4), pair_here (B,)) for one rail dimension."""
+        pair_here = has_pair & grp[rows, pa] & grp[rows, pb]
+        # plain traffic-proportional split, volumes floored at 1.0
+        vf = np.where(grp, np.maximum(vols4, 1.0), 0.0)
+        sv = vf.sum(1)
+        svs = np.where(sv > 0, sv, 1.0)
+        plain = np.where(
+            grp, np.maximum(np.floor(l_half[:, None] * vf
+                                     / svs[:, None]), 1.0), 0.0)
+        if not pair_here.any():
+            return plain, pair_here
+        # pair shares l_reuse links; others get the remainder (raw vols)
+        vmax = np.maximum(vols4[rows, pa], vols4[rows, pb])
+        others = grp & ~pair_slots
+        vo = np.where(others, vols4, 0.0)
+        so = vo.sum(1)
+        denom = so + vmax
+        l_r = np.where(denom > 0,
+                       np.maximum(np.floor(l_half * vmax
+                                           / np.where(denom > 0, denom,
+                                                      1.0)), 1.0),
+                       l_half)
+        rest = l_half - l_r
+        sos = np.where(so > 0, so, 1.0)
+        shared = np.where(
+            others,
+            np.where(so[:, None] > 0,
+                     np.maximum(np.floor(rest[:, None] * vo
+                                         / sos[:, None]), 1.0), 1.0),
+            0.0)
+        shared[rows, pa] = l_r
+        shared[rows, pb] = l_r
+        # non-pair rows keep the plain split (shared is discarded there)
+        return np.where(pair_here[:, None], shared, plain), pair_here
+
+    a1, p1 = dim_alloc(g1)
+    a2, p2 = dim_alloc(g2)
+    alloc = np.zeros_like(vols)
+    alloc[:, cols] = a1 + a2             # groups are disjoint
+    return alloc, p1 | p2, derivable
+
+
+# ---------------------------------------------------------------------------
 # Reuse-pair selection (port of traffic.reusable_pairs + simulate filter)
 # ---------------------------------------------------------------------------
 def pick_reuse_pairs(vols: np.ndarray, inter_mask: np.ndarray
@@ -604,10 +720,13 @@ def _run_terms(a: Dict, fabric: str, hw: HW, backend: str):
 def batched_simulate(w: Workload, batch: StrategyBatch, mcm,
                      fabric: str = "oi", reuse: bool = True,
                      hw: Optional[HW] = None,
-                     backend: str = "numpy") -> BatchedSimResult:
+                     backend: str = "numpy",
+                     alloc_mode: str = "chiplight") -> BatchedSimResult:
     """``mcm`` may be an ``MCMArch`` (homogeneous batch) or an
     ``MCMBatch`` of per-point parameters (fused cross-variant sweep; an
-    explicit ``hw`` is then required)."""
+    explicit ``hw`` is then required).  ``alloc_mode`` selects the OI
+    link allocator: ``"chiplight"`` (traffic-proportional + dynamic
+    reuse) or ``"railx"`` (uniform 50/50 two-rail-dim baseline)."""
     if hw is None:
         if isinstance(mcm, MCMBatch):
             raise ValueError("pass hw= explicitly with an MCMBatch")
@@ -709,11 +828,24 @@ def batched_simulate(w: Workload, batch: StrategyBatch, mcm,
     reuse_overhead = np.zeros(Bs)
     reuse_active_s = np.zeros(Bs, bool)
     alloc = np.zeros((Bs, 5))
+    if alloc_mode not in ("chiplight", "railx"):
+        raise ValueError(f"unknown alloc_mode {alloc_mode!r}; "
+                         f"use 'chiplight' or 'railx'")
     if fabric == "oi":
         pair_a = np.full(Bs, -1, np.int64)
         pair_b = np.full(Bs, -1, np.int64)
         if reuse:
             pair_a, pair_b = pick_reuse_pairs(vols, inter_mask)
+        alloc_rx = None
+        if alloc_mode == "railx":
+            alloc_rx, pair_shared, _ = allocate_links_railx_batch(
+                vols, inter, inter_mask, mb.total_links, pair_a, pair_b,
+                hw.ocs_ports)
+            # the pair can only share links when railx co-locates it
+            pair_a = np.where(pair_shared, pair_a, -1)
+            pair_b = np.where(pair_shared, pair_b, -1)
+        pair_pre_gate = pair_a >= 0
+        if reuse:
             # bank-swap feasibility of flipping the shared links
             gap = t_comp / np.maximum(layers_stage * nm, 1) / 2.0
             if hw.ocs_reuse_mode != "paper":
@@ -727,8 +859,19 @@ def batched_simulate(w: Workload, batch: StrategyBatch, mcm,
             if hw.ocs_reuse_mode != "paper":
                 reuse_overhead = np.where(
                     reuse_active_s, 2.0 * hw.ocs_switch_latency_s / nm, 0.0)
-        alloc = allocate_links_batch(vols, inter_mask, mb.total_links,
-                                     pair_a, pair_b)
+        if alloc_mode == "railx":
+            alloc = alloc_rx
+            gated = pair_pre_gate & (pair_a < 0)
+            if gated.any():
+                # mirror simulate(): a topology reuse pair that cannot
+                # bank-swap falls back to the traffic-proportional alloc
+                none_p = np.full(Bs, -1, np.int64)
+                alloc_cl = allocate_links_batch(
+                    vols, inter_mask, mb.total_links, none_p, none_p)
+                alloc = np.where(gated[:, None], alloc_cl, alloc_rx)
+        else:
+            alloc = allocate_links_batch(vols, inter_mask, mb.total_links,
+                                         pair_a, pair_b)
 
     # ---------------- cost terms (numpy or jax.vmap) ----------------
     a = {"vols": vols, "alloc": alloc, "inv": inv,

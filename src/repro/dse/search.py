@@ -73,13 +73,14 @@ class BatchedEvaluator:
 
     def __init__(self, w: Workload, mcm: MCMArch, fabric: str = "oi",
                  reuse: bool = True, hw: Optional[HW] = None,
-                 backend: str = "numpy"):
+                 backend: str = "numpy", alloc_mode: str = "chiplight"):
         self.w = w
         self.mcm = mcm
         self.fabric = fabric
         self.reuse = reuse
         self.hw = hw or mcm.hw
         self.backend = backend
+        self.alloc_mode = alloc_mode
         self.cost = cluster_cost(mcm, None, fabric=fabric, hw=self.hw).total
         self.n_sim = 0
         self.n_hits = 0
@@ -150,7 +151,8 @@ class BatchedEvaluator:
         if len(miss):
             sub = batch.take(miss)
             res = batched_simulate(self.w, sub, self.mcm, self.fabric,
-                                   self.reuse, self.hw, self.backend)
+                                   self.reuse, self.hw, self.backend,
+                                   alloc_mode=self.alloc_mode)
             self.n_sim += len(sub)
             vals = np.stack([np.asarray(getattr(res, f), np.float64)
                              for f in _RESULT_FIELDS], 1)
@@ -184,7 +186,8 @@ class BatchedEvaluator:
         if miss:
             sub = batch.take(np.array(miss, np.int64))
             res = batched_simulate(self.w, sub, self.mcm, self.fabric,
-                                   self.reuse, self.hw, self.backend)
+                                   self.reuse, self.hw, self.backend,
+                                   alloc_mode=self.alloc_mode)
             self.n_sim += len(sub)
             vals = np.stack([np.asarray(getattr(res, f), np.float64)
                              for f in _RESULT_FIELDS], 1)
@@ -495,7 +498,8 @@ def _sweep_fused(space: DesignSpace, backend: str) -> SweepResult:
         res = batched_simulate(space.workload, batch,
                                MCMBatch.from_mcms(mcms, local),
                                fabric=fabric, reuse=space.reuse,
-                               hw=mcms[0].hw, backend=backend)
+                               hw=mcms[0].hw, backend=backend,
+                               alloc_mode=space.alloc_mode)
         costs = np.array([cluster_cost(m, None, fabric=fabric,
                                        hw=m.hw).total for m in mcms])[local]
         batches.append(batch)
@@ -591,7 +595,8 @@ class _FusedEvaluator:
                                self.batch.take(rows),
                                self.mb.take(rows), fabric=fabric,
                                reuse=self.space.reuse, hw=hw,
-                               backend=self.backend)
+                               backend=self.backend,
+                               alloc_mode=self.space.alloc_mode)
         self._vals[rows] = np.stack(
             [np.asarray(getattr(res, f), np.float64)
              for f in _RESULT_FIELDS], 1)
@@ -678,18 +683,50 @@ def refine_top_points(sweep: SweepResult, top_k: int = 8,
     ``batched_simulate`` over all top-K rows per fabric plus the
     memoized ``derive_physical`` front-end.  ``method="scalar"`` is the
     original per-point ``evaluate_point`` loop, kept as the parity
-    reference (same points, same topologies, metrics to 1e-9)."""
+    reference (same points, same topologies, metrics to 1e-9).  A
+    ``railx`` sweep refines through the RailX oracle
+    (``railx_evaluate_point``) under either method."""
     feas = np.nonzero(sweep.metrics["feasible"])[0]
     order = feas[np.argsort(-sweep.metrics["throughput"][feas])][:top_k]
-    if method == "scalar":
-        out = _refine_scalar(sweep, order)
-    elif method == "batched":
-        out = _refine_batched(sweep, order)
-    else:
-        raise ValueError(f"unknown refine method {method!r}; "
-                         f"use 'batched' or 'scalar'")
+    out = refine_sweep_rows(sweep, order, method=method)
     out.sort(key=lambda p: -p.throughput)
     return out
+
+
+def refine_sweep_rows(sweep: SweepResult, rows, method: str = "batched"
+                      ) -> List:
+    """Give the given sweep rows the full scalar treatment (derived
+    topology, exact OCS-inclusive cost), preserving row order; rows that
+    are infeasible or whose physical rails cannot be derived are skipped
+    (not reordered).  The population outer search uses this to refine
+    per-variant winners in one call."""
+    rows = np.asarray(rows, np.int64)
+    if sweep.space.alloc_mode == "railx":
+        return _refine_railx(sweep, rows)
+    if method == "scalar":
+        return _refine_scalar(sweep, rows)
+    if method == "batched":
+        return _refine_batched(sweep, rows)
+    raise ValueError(f"unknown refine method {method!r}; "
+                     f"use 'batched' or 'scalar'")
+
+
+def refine_cell_rows(w: Workload, mcm: MCMArch, batch: StrategyBatch,
+                     rows, fabric: str = "oi", reuse: bool = True,
+                     hw: Optional[HW] = None,
+                     method: str = "batched") -> List:
+    """Vectorized scalar-treatment of ``rows`` of ONE cell's strategy
+    grid (the inner search's refinement step), row order preserved."""
+    import dataclasses
+    hw = hw or mcm.hw
+    if hw is not mcm.hw:
+        mcm = dataclasses.replace(mcm, hw=hw)
+    space = DesignSpace(workload=w, mcms=(mcm,), fabrics=(fabric,),
+                        reuse=reuse)
+    n = len(batch)
+    sweep = SweepResult(space, batch, np.zeros(n, np.int64),
+                        np.full(n, fabric), metrics={})
+    return refine_sweep_rows(sweep, rows, method=method)
 
 
 def _refine_scalar(sweep: SweepResult, order: np.ndarray) -> List:
@@ -701,6 +738,21 @@ def _refine_scalar(sweep: SweepResult, order: np.ndarray) -> List:
         pt = evaluate_point(sweep.space.workload, s, mcm,
                             fabric=str(sweep.fabric[i]),
                             reuse=sweep.space.reuse)
+        if pt is not None:
+            out.append(pt)
+    return out
+
+
+def _refine_railx(sweep: SweepResult, order: np.ndarray) -> List:
+    """RailX refinement: the scalar RailX oracle per top row (the rail
+    grouping search is combinatorial; top-K is small)."""
+    from repro.core.optimizer import railx_evaluate_point  # lazy: no cycle
+    out = []
+    for i in order:
+        mcm = sweep.space.mcms[int(sweep.mcm_idx[i])]
+        s = sweep.batch.take(np.array([i])).to_strategies()[0]
+        pt = railx_evaluate_point(sweep.space.workload, s, mcm,
+                                  reuse=sweep.space.reuse, hw=mcm.hw)
         if pt is not None:
             out.append(pt)
     return out

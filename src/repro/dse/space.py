@@ -15,7 +15,7 @@ sweeps (see DESIGN.md).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -107,12 +107,44 @@ class StrategyBatch:
 from repro.core.optimizer import _divisors  # noqa: E402  (shared helper)
 
 
+# The candidate grid depends on the MCM only through (n_devices,
+# dies_per_mcm) — across an MCM-variant grid at constant C, the m/cpo
+# axes share one grid per die count.  The population outer search and
+# the fused sweeps re-enumerate the same few grids constantly, so a
+# content-keyed memo (Workload and its ModelConfig are frozen/hashable)
+# turns enumeration into a dict hit.  Entries are treated as immutable.
+_GRID_CACHE: Dict[tuple, StrategyBatch] = {}
+_GRID_CACHE_MAX = 256
+
+
 def enumerate_strategy_batch(w: Workload, mcm: MCMArch,
                              max_pp: int = 32,
                              min_layers_per_stage: int = 4,
                              mappable_only: bool = True) -> StrategyBatch:
     """SoA grid of valid strategies — same set (and nested-loop order) as
-    ``core.optimizer.enumerate_strategies``, built vectorized."""
+    ``core.optimizer.enumerate_strategies``, built vectorized and
+    memoized per (workload, n_devices, dies_per_mcm)."""
+    key = (w, mcm.n_devices, mcm.dies_per_mcm, max_pp,
+           min_layers_per_stage, mappable_only)
+    try:
+        return _GRID_CACHE[key]
+    except (KeyError, TypeError):       # TypeError: unhashable workload
+        pass
+    batch = _enumerate_strategy_batch(w, mcm, max_pp,
+                                      min_layers_per_stage, mappable_only)
+    try:
+        if len(_GRID_CACHE) >= _GRID_CACHE_MAX:
+            _GRID_CACHE.clear()
+        _GRID_CACHE[key] = batch
+    except TypeError:
+        pass
+    return batch
+
+
+def _enumerate_strategy_batch(w: Workload, mcm: MCMArch,
+                              max_pp: int = 32,
+                              min_layers_per_stage: int = 4,
+                              mappable_only: bool = True) -> StrategyBatch:
     n = mcm.n_devices
     dies = mcm.dies_per_mcm
     moe = w.model.moe
@@ -156,6 +188,25 @@ def enumerate_strategy_batch(w: Workload, mcm: MCMArch,
     return batch
 
 
+def enumerate_space_batch(w: Workload, mcms: Sequence[MCMArch],
+                          max_pp: int = 32, min_layers_per_stage: int = 4
+                          ) -> Tuple[StrategyBatch, np.ndarray]:
+    """Batched strategy enumeration ACROSS MCM variants: the concatenated
+    grids of every variant plus a per-row variant index, for building
+    custom fused ``MCMBatch`` evaluations outside ``DesignSpace`` (the
+    sweep/outer paths enumerate per cell through the same memo).  Grids
+    are memoized per (workload, n_devices, dies), so variants differing
+    only in m/cpo share one enumeration."""
+    grids = [enumerate_strategy_batch(w, m, max_pp=max_pp,
+                                      min_layers_per_stage=min_layers_per_stage)
+             for m in mcms]
+    if not grids:
+        return StrategyBatch.from_strategies([]), np.zeros(0, np.int64)
+    idx = np.concatenate([np.full(len(g), i, np.int64)
+                          for i, g in enumerate(grids)])
+    return StrategyBatch.concat(grids), idx
+
+
 # ---------------------------------------------------------------------------
 # MCM-variant + fabric grid
 # ---------------------------------------------------------------------------
@@ -191,15 +242,21 @@ class DesignSpace:
     reuse: bool = True
     max_pp: int = 32
     min_layers_per_stage: int = 4
+    # link-allocation policy on the OI fabric: "chiplight" is the
+    # traffic-proportional allocator (+ dynamic reuse), "railx" the
+    # uniform 50/50 two-rail-dimension baseline
+    alloc_mode: str = "chiplight"
 
     @classmethod
     def from_compute(cls, w: Workload, total_tflops: float,
                      fabrics: Sequence[str] = ("oi",), reuse: bool = True,
-                     hw: HW = DEFAULT_HW, **grid_kw) -> "DesignSpace":
+                     hw: HW = DEFAULT_HW, alloc_mode: str = "chiplight",
+                     **grid_kw) -> "DesignSpace":
         return cls(workload=w,
                    mcms=tuple(enumerate_mcm_grid(total_tflops, hw=hw,
                                                  **grid_kw)),
-                   fabrics=tuple(fabrics), reuse=reuse)
+                   fabrics=tuple(fabrics), reuse=reuse,
+                   alloc_mode=alloc_mode)
 
     def batches(self) -> Iterator[Tuple[MCMArch, str, StrategyBatch]]:
         """Yield one (mcm, fabric, StrategyBatch) slab per grid cell."""

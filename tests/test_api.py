@@ -133,7 +133,8 @@ def test_scalar_drivers_deterministic_from_scenario_seed():
     sc = Scenario(model="tinyllama_1_1b", total_tflops=3e4, seq_len=4096,
                   global_batch=256, dies_per_mcm=(4,), m=(6,),
                   cpo_ratio=(0.6,), driver="chiplight-outer",
-                  driver_kw={"outer_iters": 2, "inner_budget": 8},
+                  driver_kw={"method": "scalar", "outer_iters": 2,
+                             "inner_budget": 8},
                   keep_top=8, seed=7)
     r1, r2 = Study(sc).run(), Study(sc).run()
     assert len(r1.traces) == 3          # outer_iters + 1 (final proposal)
@@ -242,10 +243,20 @@ def test_scenario_hashable_by_content():
     assert hash(a) != hash(a.replace(seed=99))
 
 
-def test_scalar_driver_rejects_multi_cell_grid():
-    sc = Scenario(**{**TINY, "driver": "railx", "m": (2, 6)})
+def test_single_cell_drivers_reject_multi_cell_grid():
+    sc = Scenario(**{**TINY, "driver": "chiplight-outer", "m": (2, 6)})
     with pytest.raises(ValueError, match="single MCM cell"):
         Study(sc).run()
+    # the scalar railx loop is single-cell too; the batched railx sweep
+    # (default) accepts the full grid
+    sc = Scenario(**{**TINY, "driver": "railx", "m": (2, 6),
+                     "driver_kw": {"method": "scalar"}})
+    with pytest.raises(ValueError, match="single MCM cell"):
+        Study(sc).run()
+    res = Study(Scenario(**{**TINY, "driver": "railx",
+                            "m": (2, 6)})).run()
+    assert res.best is not None
+    assert res.provenance["engine"] == "dse.sweep[railx]+refine"
 
 
 def test_batched_driver_kw_translated_and_validated(tmp_path, capsys):

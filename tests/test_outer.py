@@ -1,0 +1,285 @@
+"""Tests for the population-based batched outer search (repro.dse.outer)
+and its satellites: the vectorized inner-search refinement, the pure
+move generator + ``_rescale_dies`` device-count preservation, the single
+Pareto engine, seed determinism for both outer methods, and the batched
+RailX baseline."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import Scenario, Study
+from repro.configs import get_config
+from repro.core.mcm import MCMArch, mcm_from_compute
+from repro.core.optimizer import (DesignPoint, _rescale_dies,
+                                  chiplight_optimize, inner_search,
+                                  pareto_front, propose_moves,
+                                  railx_evaluate_point, railx_search)
+from repro.core.workload import Workload
+from repro.dse.outer import outer_search
+from repro.dse.space import (DesignSpace, enumerate_space_batch,
+                             enumerate_strategy_batch)
+from repro.dse.search import refine_top_points, sweep_design_space
+
+W_DENSE = Workload(model=get_config("tinyllama_1_1b"), seq_len=4096,
+                   global_batch=256)
+W_MOE = Workload(model=get_config("mixtral_8x7b"), seq_len=4096,
+                 global_batch=256)
+
+
+def _pt_key(p: DesignPoint):
+    s = p.strategy
+    return (s.tp, s.dp, s.pp, s.cp, s.ep, s.n_micro, p.mcm.n_mcm,
+            p.mcm.x, p.mcm.y, p.mcm.m, p.mcm.cpo_ratio, p.fabric,
+            p.throughput, p.cost, p.sim.step_time, p.topo)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: _rescale_dies must preserve n_devices (or reject the move)
+# ---------------------------------------------------------------------------
+def test_rescale_dies_preserves_device_count():
+    cur = MCMArch(n_mcm=8, x=4, y=4, m=6)           # 128 devices
+    up = _rescale_dies(cur, 32)
+    assert up.n_devices == cur.n_devices == 128
+    assert up.dies_per_mcm == 32 and up.n_mcm == 4
+    down = _rescale_dies(cur, 8)
+    assert down.n_devices == 128 and down.n_mcm == 16
+
+
+def test_rescale_dies_rejects_indivisible_target():
+    cur = MCMArch(n_mcm=3, x=4, y=4, m=6)           # 48 devices
+    # 48 // 32 = 1 would silently shrink the cluster to 32 devices
+    out = _rescale_dies(cur, 32)
+    assert out is cur                               # move rejected
+    assert out.n_devices == 48
+    ok = _rescale_dies(cur, 8)                      # 48 = 6 * 8: exact
+    assert ok.n_devices == 48 and ok.dies_per_mcm == 8
+
+
+def test_propose_moves_pure_generator_matches_planner():
+    cur = mcm_from_compute(3e4, 4, 6)
+    rng = np.random.default_rng(0)
+    assert propose_moves(cur, None, rng) == \
+        [dataclasses.replace(cur, m=min(cur.m + 2, 16))]
+    moves = propose_moves(cur, {"mem_pressure": 0.9, "oi_bound": 1.0},
+                          rng)
+    assert len(moves) == 3          # m+2, cpo+0.1, dies*2
+    assert all(m.n_devices == cur.n_devices for m in moves)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: one Pareto implementation (pareto_front via pareto_mask)
+# ---------------------------------------------------------------------------
+def test_pareto_front_matches_bruteforce():
+    _, pts = inner_search(W_DENSE, mcm_from_compute(1e5, 16, 6),
+                          budget=24)
+    assert len(pts) > 4
+    front = pareto_front(pts)
+    # brute force: p survives iff no q weakly dominates it (better or
+    # equal everywhere, strictly better somewhere)
+    expect = [p for p in pts
+              if not any(q.cost <= p.cost and q.throughput >= p.throughput
+                         and (q.cost < p.cost
+                              or q.throughput > p.throughput)
+                         for q in pts)]
+    assert {(p.cost, p.throughput) for p in front} == \
+        {(p.cost, p.throughput) for p in expect}
+    # cost-ascending, throughput-ascending along the front, no duplicates
+    costs = [p.cost for p in front]
+    thpts = [p.throughput for p in front]
+    assert costs == sorted(costs)
+    assert thpts == sorted(thpts)
+    assert len({(p.cost, p.throughput) for p in front}) == len(front)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: inner_search rerouted through the vectorized refinement
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("w,C,dies", [(W_DENSE, 1e5, 16),
+                                      (W_MOE, 2e5, 8)])
+def test_inner_search_batched_matches_scalar(w, C, dies):
+    mcm = mcm_from_compute(C, dies, 6)
+    best_b, pts_b = inner_search(w, mcm, budget=16, method="batched")
+    best_s, pts_s = inner_search(w, mcm, budget=16, method="scalar")
+    assert len(pts_b) == len(pts_s) > 0
+    assert [_pt_key(p) for p in pts_b] == [_pt_key(p) for p in pts_s]
+    assert _pt_key(best_b) == _pt_key(best_s)
+
+
+def test_inner_search_rejects_unknown_method():
+    with pytest.raises(ValueError, match="method"):
+        inner_search(W_DENSE, mcm_from_compute(1e5, 16, 6),
+                     method="quantum")
+
+
+# ---------------------------------------------------------------------------
+# Scalar outer path: bit-identical wrapper + inner-method parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("w,C,dies", [(W_DENSE, 3e4, 4), (W_MOE, 2e5, 8)])
+def test_scalar_outer_trace_bit_identical_across_inner_methods(w, C, dies):
+    """The scalar single-walker trace must not move under the vectorized
+    inner refinement (dense + MoE)."""
+    kw = dict(dies_per_mcm=dies, m0=6, outer_iters=2, inner_budget=8,
+              seed=7)
+    res_b = chiplight_optimize(w, C, inner_method="batched", **kw)
+    res_s = chiplight_optimize(w, C, inner_method="scalar", **kw)
+    assert res_b.outer_trace == res_s.outer_trace
+    assert _pt_key(res_b.best) == _pt_key(res_s.best)
+    assert [_pt_key(p) for p in res_b.history] == \
+        [_pt_key(p) for p in res_s.history]
+
+
+def test_chiplight_optimize_is_outer_search_scalar_wrapper():
+    res_w = chiplight_optimize(W_DENSE, 3e4, dies_per_mcm=4, m0=6,
+                               outer_iters=2, inner_budget=8, seed=7)
+    res_o = outer_search(W_DENSE, 3e4, dies_per_mcm=4, m0=6, rounds=2,
+                         inner_budget=8, walkers=1, seed=7,
+                         method="scalar")
+    assert res_w.outer_trace == res_o.outer_trace
+    assert _pt_key(res_w.best) == _pt_key(res_o.best)
+    with pytest.raises(ValueError, match="single-walker"):
+        outer_search(W_DENSE, 3e4, walkers=4, method="scalar")
+    with pytest.raises(ValueError, match="outer method"):
+        outer_search(W_DENSE, 3e4, method="annealing")
+
+
+# ---------------------------------------------------------------------------
+# Population path: determinism, structure, cache
+# ---------------------------------------------------------------------------
+def _pop(seed=0, **kw):
+    args = dict(dies_per_mcm=16, m0=6, rounds=3, inner_budget=8,
+                walkers=4, seed=seed)
+    args.update(kw)
+    return outer_search(W_DENSE, 1e5, **args)
+
+
+def test_population_seed_determinism():
+    r1, r2 = _pop(), _pop()
+    assert r1.outer_trace == r2.outer_trace
+    assert _pt_key(r1.best) == _pt_key(r2.best)
+    assert [_pt_key(p) for p in r1.history] == \
+        [_pt_key(p) for p in r2.history]
+    assert r1.stats == r2.stats
+
+
+def test_population_trace_structure_and_cache():
+    res = _pop()
+    assert len(res.outer_trace) == 4            # rounds + 1
+    for entry in res.outer_trace:
+        assert len(entry["walkers"]) == 4
+        assert all(len(wk["mcm"]) == 5 for wk in entry["walkers"])
+        json.dumps(entry)                       # JSON-serializable
+    st = res.stats
+    # the cache makes revisited architectures free: the walkers asked
+    # for more points than were ever simulated
+    assert st["n_cache_hits"] > 0
+    assert st["n_requested"] > st["n_sim"] > 0
+    assert st["n_variants"] >= 4
+    # population covers walker 0's start variant, so its best is at
+    # least the single-variant inner-search best
+    best0, _ = inner_search(W_DENSE, mcm_from_compute(1e5, 16, 6),
+                            budget=8)
+    assert res.best.throughput >= best0.throughput
+    # every walker's best MCM keeps the cluster-compute constant
+    n_dev = mcm_from_compute(1e5, 16, 6).n_devices
+    for p in res.history:
+        assert p.mcm.n_devices == n_dev
+
+
+def test_population_study_records_deterministic_and_refined():
+    sc = Scenario(model="tinyllama_1_1b", total_tflops=1e5, seq_len=4096,
+                  global_batch=256, dies_per_mcm=(16,), m=(6,),
+                  cpo_ratio=(0.6,), driver="chiplight-outer",
+                  driver_kw={"rounds": 2, "walkers": 4,
+                             "inner_budget": 8}, keep_top=16, seed=11)
+    r1, r2 = Study(sc).run(), Study(sc).run()
+    h = lambda r: json.dumps(r.to_dict(), sort_keys=True)
+    assert [h(r) for r in r1.records] == [h(r) for r in r2.records]
+    assert r1.traces == r2.traces
+    assert len(r1.traces) == 3
+    assert all(r.source == "refined" for r in r1.records)
+    assert r1.records[0].topo is not None
+    assert r1.provenance["engine"] == "dse.outer_search[population]"
+    assert r1.provenance["n_cache_hits"] >= 0
+    # walkers=1 + method=scalar reproduces the legacy engine label
+    r3 = Study(sc.replace(driver_kw={"method": "scalar",
+                                     "outer_iters": 2,
+                                     "inner_budget": 8})).run()
+    assert r3.provenance["engine"] == "core.chiplight_optimize"
+    assert all(r.source == "scalar" for r in r3.records)
+
+
+def test_outer_driver_rejects_unknown_kw():
+    sc = Scenario(model="tinyllama_1_1b", total_tflops=1e5,
+                  dies_per_mcm=(16,), m=(6,), cpo_ratio=(0.6,),
+                  driver="chiplight-outer", driver_kw={"budget": 8})
+    with pytest.raises(ValueError, match="does not accept driver_kw"):
+        Study(sc).run()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: batched strategy enumeration across MCM variants
+# ---------------------------------------------------------------------------
+def test_enumerate_space_batch_concatenates_variant_grids():
+    mcms = [mcm_from_compute(1e5, 16, m) for m in (4, 6, 8)]
+    batch, idx = enumerate_space_batch(W_DENSE, mcms)
+    grids = [enumerate_strategy_batch(W_DENSE, m) for m in mcms]
+    assert len(batch) == sum(len(g) for g in grids)
+    assert np.array_equal(np.bincount(idx),
+                          [len(g) for g in grids])
+    # variants sharing (n_devices, dies) share ONE memoized grid
+    assert grids[0] is grids[1] is grids[2]
+    sub = batch.take(np.nonzero(idx == 1)[0])
+    assert np.array_equal(sub.tp, grids[1].tp)
+
+
+# ---------------------------------------------------------------------------
+# RailX folded into the batched engine
+# ---------------------------------------------------------------------------
+def test_railx_batched_scan_matches_scalar_oracle():
+    mcm = mcm_from_compute(1e5, 16, 6)
+    space = DesignSpace(workload=W_DENSE, mcms=(mcm,), fabrics=("oi",),
+                        reuse=True, alloc_mode="railx")
+    sweep = sweep_design_space(space, driver="exhaustive")
+    batch = enumerate_strategy_batch(W_DENSE, mcm)
+    strats = batch.to_strategies()
+    assert len(sweep) == len(strats) > 0
+    checked = 0
+    for i, s in enumerate(strats):
+        pt = railx_evaluate_point(W_DENSE, s, mcm)
+        if pt is None:
+            continue        # scan is topology-blind; refinement drops it
+        assert sweep.metrics["feasible"][i]
+        assert sweep.metrics["throughput"][i] == \
+            pytest.approx(pt.throughput, rel=1e-9)
+        checked += 1
+    assert checked >= len(strats) // 2
+
+
+def test_railx_refinement_matches_scalar_search_best():
+    mcm = mcm_from_compute(1e5, 16, 6)
+    space = DesignSpace(workload=W_DENSE, mcms=(mcm,), fabrics=("oi",),
+                        reuse=True, alloc_mode="railx")
+    sweep = sweep_design_space(space, driver="exhaustive")
+    pts = refine_top_points(sweep, top_k=8)
+    best, _ = railx_search(W_DENSE, mcm, budget=10 ** 6)
+    assert pts and best is not None
+    assert pts[0].throughput == best.throughput
+    assert pts[0].topo is not None
+
+
+def test_railx_study_sweeps_multi_cell_grid():
+    sc = Scenario(model="tinyllama_1_1b", total_tflops=1e5, seq_len=4096,
+                  global_batch=256, dies_per_mcm=(16,), m=(4, 6),
+                  cpo_ratio=(0.3, 0.6), driver="railx", refine_top=2,
+                  keep_top=8)
+    res = Study(sc).run()
+    assert res.best is not None
+    assert {r.source for r in res.records} == {"batched", "refined"}
+    assert res.provenance["engine"] == "dse.sweep[railx]+refine"
+    # refined railx records carry the derived (uniform-dim) topology
+    refined = [r for r in res.records if r.source == "refined"]
+    assert refined and refined[0].topo is not None
+    rs = [d[1] for d in refined[0].topo["dims"]]
+    assert len(set(rs)) <= 1            # uniform link split across dims
