@@ -1,14 +1,16 @@
 """Fig 4 reproduction: spatial traffic distribution heatmap.
 
 Emits the device x device matrix stats (sparsity, max/mean imbalance) and
-an ASCII mini-heatmap; Observation 3: traffic is sparse + uneven.
+an ASCII mini-heatmap; Observation 3: traffic is sparse + uneven.  Also
+times the vectorized ``traffic_matrix`` against the loop reference.
 """
 from __future__ import annotations
 
-import numpy as np
+import time
 
 from benchmarks.common import emit
 from repro.core import Strategy, Workload, traffic_matrix
+from repro.core.traffic import _traffic_matrix_loop
 from repro.configs import get_config
 
 
@@ -16,6 +18,20 @@ def run():
     cfg = get_config("qwen3_moe_235b_a22b")
     w = Workload(model=cfg, seq_len=10240, global_batch=512)
     s = Strategy(tp=4, dp=4, pp=2, cp=2, ep=4, n_micro=8)  # 256 devices
+
+    def best_of(fn, n=3):
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn(w, s, ep_fc=True)
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    t_vec = best_of(traffic_matrix)
+    t_loop = best_of(_traffic_matrix_loop)
+    print(f"traffic_matrix (ep_fc): loop {t_loop * 1e3:.2f} ms -> "
+          f"vectorized {t_vec * 1e3:.2f} ms = {t_loop / t_vec:.1f}x")
+
     mat = traffic_matrix(w, s)
     n = mat.shape[0]
     nz = mat > 0

@@ -66,6 +66,10 @@ class Scenario:
     driver_kw: Dict[str, Any] = field(default_factory=dict)
     refine_top: int = 8            # scalar-oracle refinement of winners
     keep_top: int = 256            # records kept in StudyResult (0 = all)
+    # event-driven validation (repro.events): replay the top-K records
+    # and stamp validated_step_time / fidelity_err (0 = off)
+    validate_top: int = 0
+    schedule: str = "gpipe"        # pipeline schedule the replay uses
     backend: str = "numpy"
     seed: int = 0
     name: str = ""                 # study label (defaults to model)
@@ -118,8 +122,13 @@ class Scenario:
         if self.backend not in ("numpy", "jax", "auto"):
             raise ValueError(f"backend must be numpy|jax|auto, "
                              f"got {self.backend!r}")
-        if self.refine_top < 0 or self.keep_top < 0:
-            raise ValueError("refine_top and keep_top must be >= 0")
+        if self.refine_top < 0 or self.keep_top < 0 or self.validate_top < 0:
+            raise ValueError("refine_top, keep_top and validate_top must "
+                             "be >= 0")
+        from repro.events.dag import SCHEDULES  # core-only dep, no cycle
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"unknown schedule {self.schedule!r}; "
+                             f"known: {list(SCHEDULES)}")
 
     # ------------------------------------------------------------------
     # Engine-object builders

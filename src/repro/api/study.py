@@ -32,13 +32,24 @@ class Study:
 
     scenario: Scenario
 
-    def run(self) -> StudyResult:
-        return DRIVERS.get(self.scenario.driver)(self.scenario)
+    def run(self, validate_top: Optional[int] = None,
+            schedule: Optional[str] = None) -> StudyResult:
+        """Run the scenario's driver; when ``validate_top`` (argument or
+        scenario field) is > 0, the top-K records are replayed by the
+        event-driven engine (``repro.events``, vectorized batch path)
+        and stamped with ``validated_step_time`` / ``fidelity_err``."""
+        sc = self.scenario
+        result = DRIVERS.get(sc.driver)(sc)
+        k = sc.validate_top if validate_top is None else validate_top
+        if k:
+            from repro.events.validate import stamp_validation
+            stamp_validation(result, k, schedule or sc.schedule)
+        return result
 
 
-def run(scenario: Scenario) -> StudyResult:
+def run(scenario: Scenario, **kw) -> StudyResult:
     """Module-level convenience: ``repro.api.run(scenario)``."""
-    return Study(scenario).run()
+    return Study(scenario).run(**kw)
 
 
 # ---------------------------------------------------------------------------

@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m repro.cli scenarios/paper_qwen3.json
     PYTHONPATH=src python -m repro.cli --model qwen3_moe_235b_a22b \
         --C 4e6 --fabrics oi,ib --driver exhaustive --top 5
+    PYTHONPATH=src python -m repro.cli validate scenarios/*.json
 
 Runs ``Study.run()`` on scenario JSON files (flags override fields) or on
 a scenario built from flags alone (``--model all`` sweeps the whole
@@ -10,8 +11,15 @@ zoo), prints the best points + Pareto summary, and writes one versioned
 ``StudyResult`` JSON artifact per study.  Subsumes the old
 ``repro.dse.run`` CLI (kept as a deprecation shim).
 
+The ``validate`` subcommand runs the event-driven fidelity harness
+(``repro.events.validate``) over scenario presets: top points are
+replayed by the discrete-event engine under the requested pipeline
+schedules and compared against the analytic model, writing a versioned
+fidelity report artifact.
+
 Exit codes: 0 ok; 2 bad arguments; 3 when a study found NO feasible
-design point (every sweep cell infeasible).
+design point (every sweep cell infeasible); ``validate``: 1 when any
+asserted point exceeds the fidelity tolerance.
 """
 from __future__ import annotations
 
@@ -85,6 +93,12 @@ def build_parser() -> argparse.ArgumentParser:
                          "(0 disables)")
     ap.add_argument("--keep-top", type=int, default=None,
                     help="records kept in the artifact (0 = all)")
+    ap.add_argument("--validate-top", type=int, default=None,
+                    help="event-replay validation of the top N records "
+                         "(stamps validated_step_time/fidelity_err)")
+    ap.add_argument("--schedule", default=None,
+                    choices=("gpipe", "1f1b", "interleaved"),
+                    help="pipeline schedule the event replay uses")
     ap.add_argument("--top", type=int, default=5,
                     help="best points to print")
     ap.add_argument("--seed", type=int, default=None)
@@ -104,6 +118,7 @@ _FLAG_FIELDS = {          # argparse dest -> Scenario field
     "dies": "dies_per_mcm", "m": "m", "cpo": "cpo_ratio",
     "objectives": "objectives", "driver": "driver", "backend": "backend",
     "refine_top": "refine_top", "keep_top": "keep_top", "seed": "seed",
+    "validate_top": "validate_top", "schedule": "schedule",
 }
 
 
@@ -138,7 +153,8 @@ def _quick(sc: Scenario) -> Scenario:
     return sc.replace(dies_per_mcm=sc.dies_per_mcm[:1], m=sc.m[:1],
                       cpo_ratio=sc.cpo_ratio[:1], fabrics=sc.fabrics[:1],
                       refine_top=min(sc.refine_top, 3),
-                      keep_top=min(sc.keep_top, 32) or 32, driver_kw=kw)
+                      keep_top=min(sc.keep_top, 32) or 32,
+                      validate_top=min(sc.validate_top, 2), driver_kw=kw)
 
 
 def build_scenarios(args) -> List[Scenario]:
@@ -198,6 +214,13 @@ def _print_study(res: StudyResult, top: int):
                   f"(exact topo/OCS cost)")
     print(f"  pareto set ({'/'.join(sc.objectives)}): "
           f"{len(res.pareto)} non-dominated records")
+    val = res.provenance.get("validate")
+    if val:
+        err = val.get("max_abs_err")
+        print(f"  event-validated {val['n_validated']} records "
+              f"({val['schedule']}): max |fidelity err| "
+              f"{err * 100:.1f}%" if err is not None else
+              f"  event-validated 0 records")
 
 
 def _out_path(out: str, sc: Scenario, n_studies: int) -> Path:
@@ -208,7 +231,76 @@ def _out_path(out: str, sc: Scenario, n_studies: int) -> Path:
 
 
 # ---------------------------------------------------------------------------
+# `validate` subcommand — the event-driven fidelity harness
+# ---------------------------------------------------------------------------
+def build_validate_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.cli validate",
+        description="Event-driven fidelity harness: replay top design "
+                    "points of each scenario with repro.events and "
+                    "compare against the analytic model.")
+    ap.add_argument("scenario", nargs="*",
+                    help="scenario JSON file(s); default: scenarios/*.json")
+    ap.add_argument("--top", type=int, default=4,
+                    help="points replayed per scenario")
+    ap.add_argument("--schedules", type=_csv(str, "--schedules"),
+                    default=("gpipe", "1f1b", "interleaved"),
+                    help="pipeline schedules to replay")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="asserted |err| bound for gpipe/1f1b rows "
+                         "(default 0.15)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: first scenario, top 2, "
+                         "gpipe+1f1b only")
+    ap.add_argument("--out", default="artifacts/fidelity_report.json",
+                    help="fidelity report JSON path")
+    return ap
+
+
+def main_validate(argv: List[str]) -> int:
+    from repro.events.validate import DEFAULT_TOLERANCE, validate_zoo
+    ap = build_validate_parser()
+    args = ap.parse_args(argv)
+    paths = args.scenario or sorted(
+        str(p) for p in Path("scenarios").glob("*.json"))
+    tol = DEFAULT_TOLERANCE if args.tolerance is None else args.tolerance
+    top, schedules = args.top, tuple(args.schedules)
+    if args.quick:
+        paths = paths[:1]
+        top = min(top, 2)
+        schedules = tuple(s for s in schedules
+                          if s in ("gpipe", "1f1b")) or ("gpipe",)
+    try:
+        report = validate_zoo(paths, top=top, schedules=schedules,
+                              tolerance=tol, out=args.out)
+    except (ValueError, KeyError, OSError) as e:
+        ap.exit(EXIT_USAGE, f"{ap.prog}: error: {e}\n")
+    print(f"\n=== fidelity report: {report['n_scenarios']} scenarios, "
+          f"{report['n_rows']} replays, tolerance ±{tol:.0%} ===")
+    for block in report["scenarios"]:
+        by_sched: dict = {}
+        for r in block["rows"]:
+            by_sched.setdefault(r["schedule"], []).append(r)
+        parts = []
+        for sched, rows in sorted(by_sched.items()):
+            worst = max(abs(r["err"]) for r in rows)
+            parts.append(f"{sched}: max|err| {worst * 100:4.1f}%")
+        print(f"  {block['scenario']:24s} "
+              f"({block['n_points']} pts)  " + "   ".join(parts))
+    print(f"  wrote {args.out}")
+    if report["n_violations"]:
+        print(f"FAIL: {report['n_violations']} asserted replays exceed "
+              f"±{tol:.0%}")
+        return 1
+    print(f"OK: all {report['n_asserted']} asserted replays within "
+          f"±{tol:.0%} of the analytic model")
+    return EXIT_OK
+
+
 def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "validate":
+        return main_validate(argv[1:])
     ap = build_parser()
     args = ap.parse_args(argv)
     try:

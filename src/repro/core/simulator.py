@@ -184,6 +184,8 @@ def simulate(w: Workload, s: Strategy, mcm: MCMArch, fabric: str = "oi",
         add_lat(p, hw.lat_intra_s)
 
     reuse_pair = None
+    reuse_cand = None              # pre-gate candidate (why-logs below)
+    reuse_gated = False            # bank-swap gate disabled the candidate
     reuse_overhead = 0.0
     if fabric in ("ib", "nvlink"):
         shared = sum(inter_vols.values())
@@ -203,12 +205,14 @@ def simulate(w: Workload, s: Strategy, mcm: MCMArch, fabric: str = "oi",
                          if pr[0] in inter_vols and pr[1] in inter_vols]
                 reuse_pair = pairs[0] if pairs else None
             alloc = allocate_links(inter_vols, mcm.total_links, reuse_pair)
+        reuse_cand = reuse_pair
         if reuse_pair is not None:
             gap = t_comp / max(layers_stage * n_micro, 1) / 2.0
             if hw.ocs_reuse_mode == "paper":
                 pass   # switching hidden per the paper's assertion
             elif not _bank_swap_reuse_ok(gap, n_micro, hw):
                 reuse_pair = None
+                reuse_gated = True
                 alloc = allocate_links(inter_vols, mcm.total_links, None)
             else:
                 reuse_overhead = 2.0 * hw.ocs_switch_latency_s / n_micro
@@ -243,6 +247,10 @@ def simulate(w: Workload, s: Strategy, mcm: MCMArch, fabric: str = "oi",
     terms = {"compute": t_comp, "memory": t_mem, **{
         f"coll_{p}": t for p, t in t_coll.items()}}
     bottleneck = max(terms, key=terms.get)
+    # reuse-decision provenance (all floats: P_ORDER index or -1) — lets
+    # the event engine / analytic model be diffed on WHY they disagree
+    # about link reuse, not just by how much.
+    pidx = lambda pr, j: float(PARALLELISMS.index(pr[j])) if pr else -1.0
     logs = {
         "compute_util": t_comp / step,
         "gemm_eff": eff,
@@ -250,6 +258,12 @@ def simulate(w: Workload, s: Strategy, mcm: MCMArch, fabric: str = "oi",
         "exposed_comm": exposed + dp_exposed,
         "bubble": bubble,
         "reuse_active": float(reuse_pair is not None),
+        "reuse_cand_a": pidx(reuse_cand, 0),
+        "reuse_cand_b": pidx(reuse_cand, 1),
+        "reuse_pair_a": pidx(reuse_pair, 0),
+        "reuse_pair_b": pidx(reuse_pair, 1),
+        "reuse_gated": float(reuse_gated),
+        "reuse_paper_mode": float(hw.ocs_reuse_mode == "paper"),
         "nop_bound": float(any(p in intra and t_coll.get(p, 0) > t_comp
                                for p in PARALLELISMS)),
         "oi_bound": float(fabric == "oi" and exposed + dp_exposed

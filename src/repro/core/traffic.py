@@ -9,7 +9,7 @@ what enables the paper's parallel-centric inner search.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict
 
 import numpy as np
@@ -103,6 +103,17 @@ def device_coords(s: Strategy, order=("TP", "CP", "EP", "PP", "DP")):
     return order, dims
 
 
+def coords_matrix(s: Strategy, order=("TP", "CP", "EP", "PP", "DP")):
+    """(order, dims, strides, (n, len(order)) coordinate matrix) — the
+    device-id <-> group-coordinate bijection, fully vectorized."""
+    order, dims = device_coords(s, order)
+    n = s.n_devices
+    strides = np.cumprod([1] + dims[:-1]).astype(np.int64)
+    ids = np.arange(n, dtype=np.int64)
+    coords = (ids[:, None] // strides[None, :]) % np.asarray(dims, np.int64)
+    return order, dims, strides, coords
+
+
 def traffic_matrix(w: Workload, s: Strategy,
                    order=("TP", "CP", "EP", "PP", "DP"),
                    ep_fc: bool = False) -> np.ndarray:
@@ -110,7 +121,45 @@ def traffic_matrix(w: Workload, s: Strategy,
 
     ep_fc: model EP A2A as fully-connected (uniform to all peers) instead
     of a ring — the paper's FC option for EP.
+
+    Fully vectorized: destination ids come from index arithmetic on the
+    coordinate matrix (``dst = src + (next - cur) * stride``), one
+    ``np.add.at`` scatter per parallelism — no per-device Python.  The
+    original nested-loop construction is kept as
+    ``_traffic_matrix_loop`` (parity-tested reference).
     """
+    n = s.n_devices
+    vols = traffic_volumes(w, s)
+    mat = np.zeros((n, n))
+    order, dims, strides, coords = coords_matrix(s, order)
+    src = np.arange(n, dtype=np.int64)
+
+    for pi, p in enumerate(order):
+        deg = dims[pi]
+        if deg <= 1 or vols[p] == 0.0:
+            continue
+        cur = coords[:, pi]
+        if p == "EP" and ep_fc:
+            # uniform A2A: each device sends v/(deg-1) to each peer —
+            # dst ids for ALL (src, peer) pairs in one (n, deg) array
+            peers = np.arange(deg, dtype=np.int64)
+            dst = src[:, None] + (peers[None, :] - cur[:, None]) \
+                * strides[pi]
+            keep = peers[None, :] != cur[:, None]
+            np.add.at(mat, (np.broadcast_to(src[:, None], dst.shape)[keep],
+                            dst[keep]), vols[p] / (deg - 1))
+            continue
+        # ring: all traffic to the next neighbour in the group
+        dst = src + (((cur + 1) % deg) - cur) * strides[pi]
+        np.add.at(mat, (src, dst), vols[p])
+    return mat
+
+
+def _traffic_matrix_loop(w: Workload, s: Strategy,
+                         order=("TP", "CP", "EP", "PP", "DP"),
+                         ep_fc: bool = False) -> np.ndarray:
+    """Reference nested-loop construction of ``traffic_matrix`` (the
+    pre-vectorization implementation) — kept for parity tests only."""
     n = s.n_devices
     vols = traffic_volumes(w, s)
     mat = np.zeros((n, n))
@@ -126,7 +175,6 @@ def traffic_matrix(w: Workload, s: Strategy,
         if deg <= 1 or vols[p] == 0.0:
             continue
         if p == "EP" and ep_fc:
-            # uniform A2A: each device sends v/(deg-1) to each peer
             per_peer = vols[p] / (deg - 1)
             for src in range(n):
                 base = coords[src].copy()
@@ -138,7 +186,6 @@ def traffic_matrix(w: Workload, s: Strategy,
                     dst = int(np.dot(dst_c, strides))
                     mat[src, dst] += per_peer
             continue
-        # ring: all traffic to the next neighbour in the group
         for src in range(n):
             dst_c = coords[src].copy()
             dst_c[pi] = (dst_c[pi] + 1) % deg

@@ -805,6 +805,7 @@ def _refine_batched(sweep: SweepResult, order: np.ndarray) -> List:
         inter_mask = (inter > 1) & (vols > 0)
         topos: List = [None] * K
         degs: List[Dict[str, int]] = [{} for _ in range(K)]
+        cands: List[Optional[Tuple[str, str]]] = [None] * K
         if fabric == "oi":
             if sweep.space.reuse:
                 pa, pb = pick_reuse_pairs(vols, inter_mask)
@@ -814,6 +815,7 @@ def _refine_batched(sweep: SweepResult, order: np.ndarray) -> List:
                                          pa, pb)
             degs, allocs, pairs = _topo_inputs(inter, inter_mask, alloc,
                                                pa, pb)
+            cands = list(pairs)
             topos = derive_physical_batch(list(zip(degs, allocs, pairs)),
                                           mcms, hw)
             # reuse-pair derivation failures: no-reuse allocation + sim
@@ -837,11 +839,15 @@ def _refine_batched(sweep: SweepResult, order: np.ndarray) -> List:
                                           hw=hw)
                 for j, k in enumerate(fb_rows):
                     topos[int(k)] = t_fb[j]
+                    # the scalar oracle re-simulates with the no-reuse
+                    # topology, so its logs see no candidate either
+                    cands[int(k)] = None
                 for f in _SIM_COLS:
                     cols[f][fb_rows] = np.asarray(getattr(res_nr, f))
 
         out.extend(_assemble_points(w, sub, mb, cols, fabric, hw, mcms,
-                                    topos, degs, intra, vols, inter_mask))
+                                    topos, degs, intra, vols, inter_mask,
+                                    cands))
     return out
 
 
@@ -869,7 +875,7 @@ def _topo_inputs(inter: np.ndarray, inter_mask: np.ndarray,
 
 
 def _assemble_points(w, sub, mb, cols, fabric, hw, mcms, topos, degs,
-                     intra, vols, inter_mask) -> List:
+                     intra, vols, inter_mask, cands=None) -> List:
     """Build scalar ``DesignPoint``s from the batched refinement arrays
     (breakdown / bottleneck / logs mirror ``core.simulator.simulate``)."""
     from repro.core.optimizer import DesignPoint      # lazy: no cycle
@@ -888,6 +894,8 @@ def _assemble_points(w, sub, mb, cols, fabric, hw, mcms, topos, degs,
         np.asarray(mb.hbm_capacity, np.float64), (K,))
 
     strategies = sub.to_strategies()
+    cands = cands if cands is not None else [None] * K
+    pidx = lambda pr, j: float(P_IDX[pr[j]]) if pr else -1.0
     out = []
     for k in range(K):
         if not cols["feasible"][k]:
@@ -906,6 +914,8 @@ def _assemble_points(w, sub, mb, cols, fabric, hw, mcms, topos, degs,
         nop_bound = any((p == "TP" or intra[k, P_IDX[p]] > 1)
                         and t_coll[k, P_IDX[p]] > t_comp[k]
                         for p in P_ORDER)
+        active = bool(cols["reuse_active"][k])
+        final = cands[k] if active else None
         logs = {
             "compute_util": float(util[k]),
             "gemm_eff": float(eff[k]),
@@ -913,6 +923,12 @@ def _assemble_points(w, sub, mb, cols, fabric, hw, mcms, topos, degs,
             "exposed_comm": float(exposed[k] + dp_exposed[k]),
             "bubble": float(cols["bubble"][k]),
             "reuse_active": float(cols["reuse_active"][k]),
+            "reuse_cand_a": pidx(cands[k], 0),
+            "reuse_cand_b": pidx(cands[k], 1),
+            "reuse_pair_a": pidx(final, 0),
+            "reuse_pair_b": pidx(final, 1),
+            "reuse_gated": float(cands[k] is not None and not active),
+            "reuse_paper_mode": float(hw.ocs_reuse_mode == "paper"),
             "nop_bound": float(nop_bound),
             "oi_bound": float(fabric == "oi"
                               and exposed[k] + dp_exposed[k]

@@ -1,0 +1,31 @@
+"""Event-driven timeline validator (DESIGN.md §events).
+
+``compile_step`` turns a design point into a per-microbatch task DAG
+under a pipeline schedule, ``replay`` runs it through the fluid
+discrete-event engine on the derived topology, ``replay_batch`` is the
+vectorized K-records-at-once path, and the ``validate_*`` harness sweeps
+the scenario zoo comparing event against analytic step times.
+
+The validate layer imports ``repro.api`` and is loaded lazily so that
+``repro.api`` itself (Scenario schedule validation) can import this
+package without a cycle.
+"""
+from repro.events.dag import (SCHEDULES, StepProgram, TaskSpec,  # noqa: F401
+                              compile_step, device_op_order)
+from repro.events.engine import EventResult, replay  # noqa: F401
+from repro.events.batch import replay_batch  # noqa: F401
+
+_LAZY = ("validate_scenario", "validate_zoo", "stamp_validation",
+         "fidelity_table", "FIDELITY_SCHEMA", "DEFAULT_TOLERANCE")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.events import validate as _v
+        return getattr(_v, name)
+    raise AttributeError(f"module 'repro.events' has no attribute {name!r}")
+
+
+__all__ = ["SCHEDULES", "StepProgram", "TaskSpec", "compile_step",
+           "device_op_order", "EventResult", "replay", "replay_batch",
+           *_LAZY]

@@ -1,0 +1,243 @@
+"""Fidelity harness: event-driven replay vs the analytic model.
+
+Two entry points sit on top of the engine:
+
+* ``stamp_validation(result, top, schedule)`` — the ``Study.run``
+  integration: batch-replays the top-K records of a ``StudyResult`` and
+  stamps each with ``validated_step_time`` / ``fidelity_err`` metrics
+  (plus a ``validate`` provenance block), keeping validation off the
+  study's critical path via ``repro.events.batch``.
+
+* ``validate_scenario`` / ``validate_zoo`` — the standalone harness
+  behind ``python -m repro.cli validate``: runs each scenario preset,
+  replays its top points with the full discrete-event engine under every
+  requested schedule, and writes a VERSIONED fidelity report artifact
+  (``FIDELITY_SCHEMA``) with per-point analytic vs event step times,
+  errors, measured bubbles and OCS reconfiguration counts.  Rows whose
+  schedule matches the analytic model's bubble assumption (``gpipe`` /
+  ``1f1b``) are asserted to agree within ``tolerance`` (default 15%);
+  ``interleaved`` rows are reported only — their smaller bubble is
+  scenario diversity the analytic model cannot express.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.mcm import MCMArch
+from repro.core.network import OITopology, RailDim
+from repro.core.traffic import Strategy
+from repro.events.batch import replay_batch
+from repro.events.dag import SCHEDULES, compile_step
+from repro.events.engine import replay
+
+FIDELITY_SCHEMA = 1
+DEFAULT_TOLERANCE = 0.15
+ASSERTED_SCHEDULES = ("gpipe", "1f1b")
+
+
+# ---------------------------------------------------------------------------
+# Record -> engine objects
+# ---------------------------------------------------------------------------
+def _rebuild_topo(topo: Optional[dict]) -> Optional[OITopology]:
+    if not topo:
+        return None
+    return OITopology(
+        dims=tuple(RailDim(n=int(n), r=int(r), k=int(k))
+                   for n, r, k in topo.get("dims", [])),
+        mapping=tuple(tuple(g) for g in topo.get("mapping", [])),
+        link_alloc=dict(topo.get("link_alloc", {})),
+        reuse_pair=tuple(topo["reuse_pair"]) if topo.get("reuse_pair")
+        else None)
+
+
+def _rebuild(record, scenario) -> Tuple[Strategy, MCMArch,
+                                        Optional[OITopology], str]:
+    st = record.strategy
+    s = Strategy(tp=int(st["TP"]), dp=int(st["DP"]), pp=int(st["PP"]),
+                 cp=int(st["CP"]), ep=int(st["EP"]),
+                 n_micro=int(st["n_micro"]))
+    mc = record.mcm
+    mcm = MCMArch(n_mcm=int(mc["n_mcm"]), x=int(mc["x"]), y=int(mc["y"]),
+                  m=int(mc["m"]), cpo_ratio=float(mc["cpo_ratio"]),
+                  hw=scenario.build_hw())
+    return s, mcm, _rebuild_topo(record.topo), record.fabric
+
+
+def _top_records(result, top: int) -> List[int]:
+    """Indices of the top-``top`` feasible records by throughput, one per
+    unique design point (refined duplicates win over batched rows —
+    they carry the derived topology)."""
+    ranked = sorted(
+        (i for i, r in enumerate(result.records) if r.feasible),
+        key=lambda i: (-result.records[i].throughput,
+                       result.records[i].source != "refined"))
+    seen, keep = set(), []
+    for i in ranked:
+        r = result.records[i]
+        key = (tuple(sorted(r.strategy.items())),
+               tuple(sorted(r.mcm.items())), r.fabric)
+        if key in seen:
+            continue
+        seen.add(key)
+        keep.append(i)
+        if len(keep) >= top:
+            break
+    return keep
+
+
+# ---------------------------------------------------------------------------
+# Study integration (batch replay — off the critical path)
+# ---------------------------------------------------------------------------
+def stamp_validation(result, top: int, schedule: str = "gpipe") -> dict:
+    """Replay the top-``top`` records of ``result`` and stamp each with
+    ``validated_step_time`` / ``fidelity_err``; returns (and attaches to
+    ``result.provenance['validate']``) a summary block."""
+    t0 = time.perf_counter()
+    sc = result.scenario
+    idx = _top_records(result, top)
+    programs, rows = [], []
+    for i in idx:
+        r = result.records[i]
+        try:
+            s, mcm, topo, fabric = _rebuild(r, sc)
+            programs.append(compile_step(
+                sc.build_workload(), s, mcm, fabric=fabric, topo=topo,
+                reuse=sc.reuse, hw=sc.build_hw(), schedule=schedule))
+            rows.append(i)
+        except ValueError:
+            continue                  # infeasible under the scalar oracle
+    res = replay_batch(programs)
+    errs = []
+    for j, i in enumerate(rows):
+        rec = result.records[i]
+        rec.metrics["validated_step_time"] = float(res["step_time"][j])
+        rec.metrics["fidelity_err"] = float(res["err"][j])
+        errs.append(abs(float(res["err"][j])))
+    summary = {"n_validated": len(rows), "schedule": schedule,
+               "method": "batch",
+               "max_abs_err": max(errs) if errs else None,
+               "elapsed_s": time.perf_counter() - t0}
+    result.provenance["validate"] = summary
+    result.timings["validate_s"] = summary["elapsed_s"]
+    return summary
+
+
+# ---------------------------------------------------------------------------
+# Standalone fidelity harness (scalar engine — the ground truth)
+# ---------------------------------------------------------------------------
+def validate_scenario(scenario, top: int = 4,
+                      schedules: Sequence[str] = SCHEDULES,
+                      tolerance: float = DEFAULT_TOLERANCE) -> dict:
+    """Run one scenario, replay its top points under every schedule with
+    the full event engine, and return a per-point fidelity block."""
+    from repro.api import Study
+    bad = [s for s in schedules if s not in SCHEDULES]
+    if bad:
+        raise ValueError(f"unknown schedules {bad}; known: "
+                         f"{list(SCHEDULES)}")
+    t0 = time.perf_counter()
+    # validate_top=0: the harness replays the points itself (scalar
+    # engine, every schedule) — don't batch-validate them a first time
+    result = Study(scenario).run(validate_top=0)
+    rows = []
+    for i in _top_records(result, top):
+        rec = result.records[i]
+        try:
+            s, mcm, topo, fabric = _rebuild(rec, scenario)
+        except (KeyError, TypeError):
+            continue
+        for sched in schedules:
+            try:
+                prog = compile_step(scenario.build_workload(), s, mcm,
+                                    fabric=fabric, topo=topo,
+                                    reuse=scenario.reuse,
+                                    hw=scenario.build_hw(), schedule=sched)
+            except ValueError:
+                continue
+            ev = replay(prog)
+            asserted = sched in ASSERTED_SCHEDULES
+            rows.append({
+                "scenario": scenario.name,
+                "schedule": sched,
+                "strategy": dict(rec.strategy),
+                "mcm": dict(rec.mcm),
+                "fabric": fabric,
+                "analytic_step_time": ev.analytic_step_time,
+                "event_step_time": ev.step_time,
+                "err": ev.err,
+                "bubble_event": ev.bubble,
+                "bubble_analytic": float(
+                    prog.analytic.logs.get("bubble", 0.0)),
+                "peak_inflight": ev.peak_inflight,
+                "n_reconf": ev.n_reconf,
+                "reconf_wait_s": ev.reconf_wait_s,
+                "n_events": ev.n_events,
+                "asserted": asserted,
+                "ok": (abs(ev.err) <= tolerance) if asserted else True,
+            })
+    n_points = len({(tuple(sorted(r["strategy"].items())),
+                     tuple(sorted(r["mcm"].items())), r["fabric"])
+                    for r in rows})
+    return {"scenario": scenario.name,
+            "scenario_hash": scenario.scenario_hash(),
+            "n_points": n_points,
+            "rows": rows, "elapsed_s": time.perf_counter() - t0}
+
+
+def validate_zoo(paths: Sequence = (), top: int = 4,
+                 schedules: Sequence[str] = SCHEDULES,
+                 tolerance: float = DEFAULT_TOLERANCE,
+                 out: Optional[str] = None) -> dict:
+    """Sweep scenario JSON files (default: ``scenarios/*.json``) through
+    ``validate_scenario`` and write the versioned fidelity report."""
+    from repro.api import Scenario
+    paths = list(paths) or sorted(Path("scenarios").glob("*.json"))
+    blocks = []
+    for path in paths:
+        sc = Scenario.load(path)
+        blocks.append(validate_scenario(sc, top=top, schedules=schedules,
+                                        tolerance=tolerance))
+    rows = [r for b in blocks for r in b["rows"]]
+    asserted = [r for r in rows if r["asserted"]]
+    violations = [r for r in asserted if not r["ok"]]
+    report = {
+        "schema": FIDELITY_SCHEMA,
+        "tolerance": tolerance,
+        "schedules": list(schedules),
+        "top_per_scenario": top,
+        "n_scenarios": len(blocks),
+        "n_rows": len(rows),
+        "n_asserted": len(asserted),
+        "n_violations": len(violations),
+        "max_abs_err_asserted": max((abs(r["err"]) for r in asserted),
+                                    default=None),
+        "scenarios": blocks,
+    }
+    if out:
+        p = Path(out)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(report, indent=2) + "\n")
+    return report
+
+
+def fidelity_table(report: dict) -> List[Dict]:
+    """Per-(scenario, schedule) summary rows for reporting (README)."""
+    agg: Dict[Tuple[str, str], List[dict]] = {}
+    for b in report["scenarios"]:
+        for r in b["rows"]:
+            agg.setdefault((r["scenario"], r["schedule"]), []).append(r)
+    out = []
+    for (name, sched), rows in sorted(agg.items()):
+        out.append({
+            "scenario": name, "schedule": sched, "n": len(rows),
+            "max_abs_err": max(abs(r["err"]) for r in rows),
+            "mean_err": sum(r["err"] for r in rows) / len(rows),
+            "mean_bubble_event": sum(r["bubble_event"] for r in rows)
+            / len(rows),
+            "mean_bubble_analytic": sum(r["bubble_analytic"] for r in rows)
+            / len(rows),
+        })
+    return out

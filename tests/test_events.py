@@ -1,0 +1,328 @@
+"""Tests for the event-driven timeline validator (repro.events) plus the
+satellite work that rode along: vectorized traffic matrices and the
+reuse-decision provenance in simulate() logs."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.core.mcm import mcm_from_compute
+from repro.core.optimizer import enumerate_strategies
+from repro.core.simulator import map_intra, simulate
+from repro.core.traffic import (PARALLELISMS, Strategy, _traffic_matrix_loop,
+                                traffic_matrix, traffic_volumes)
+from repro.core.workload import Workload
+from repro.events import compile_step, replay, replay_batch
+from repro.events.dag import SCHEDULES, device_op_order
+
+TINY = Workload(model=get_config("tinyllama_1_1b"), seq_len=4096,
+                global_batch=256)
+MOE = Workload(model=get_config("qwen3_moe_235b_a22b"), seq_len=10240,
+               global_batch=512)
+HYBRID = Workload(model=get_config("zamba2_7b"), seq_len=4096,
+                  global_batch=256)
+
+MCM_TINY = mcm_from_compute(1e6, 16, 6)
+MCM_MOE = mcm_from_compute(4e6, 16, 6)
+MCM_HYB = mcm_from_compute(1e6, 16, 6)
+
+_CASES = [("tiny", TINY, MCM_TINY), ("moe", MOE, MCM_MOE),
+          ("hybrid", HYBRID, MCM_HYB)]
+_GRIDS = {}
+
+
+def _feasible(name, w, mcm):
+    if name not in _GRIDS:
+        out = []
+        for s in enumerate_strategies(w, mcm):
+            r = simulate(w, s, mcm)
+            if r.feasible:
+                out.append((s, r))
+        out.sort(key=lambda t: -t[1].throughput)
+        _GRIDS[name] = out
+    return _GRIDS[name]
+
+
+# ---------------------------------------------------------------------------
+# Satellite: vectorized traffic_matrix parity vs the loop reference
+# ---------------------------------------------------------------------------
+@settings(max_examples=12)
+@given(st.sampled_from([TINY, MOE]), st.integers(0, 10 ** 6),
+       st.booleans())
+def test_traffic_matrix_parity(w, pick, ep_fc):
+    name, mcm = ("tiny", MCM_TINY) if w is TINY else ("moe", MCM_MOE)
+    grid = _feasible(name, w, mcm)
+    s = grid[pick % len(grid)][0]
+    if s.n_devices > 2048:          # keep the O(n^2) reference cheap
+        s = Strategy(tp=s.tp, dp=max(s.dp // 4, 1), pp=s.pp, cp=s.cp,
+                     ep=s.ep, n_micro=s.n_micro)
+    got = traffic_matrix(w, s, ep_fc=ep_fc)
+    want = _traffic_matrix_loop(w, s, ep_fc=ep_fc)
+    assert np.allclose(got, want, rtol=1e-12, atol=0.0)
+
+
+def test_traffic_matrix_row_conservation():
+    s = Strategy(tp=4, dp=4, pp=2, cp=2, ep=4, n_micro=8)
+    vols = traffic_volumes(MOE, s)
+    total = sum(v for p, v in vols.items() if s.degree(p) > 1)
+    for ep_fc in (False, True):
+        mat = traffic_matrix(MOE, s, ep_fc=ep_fc)
+        assert np.allclose(mat.sum(1), total, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: reuse-decision provenance in simulate() logs
+# ---------------------------------------------------------------------------
+REUSE_S = Strategy(tp=1, dp=128, pp=2, cp=2, ep=8, n_micro=4)
+
+
+def test_simulate_logs_reuse_gated():
+    r = simulate(MOE, REUSE_S, MCM_MOE)
+    logs = r.logs
+    assert logs["reuse_cand_a"] >= 0 and logs["reuse_cand_b"] >= 0
+    assert logs["reuse_gated"] == 1.0          # banked MEMS gate fired
+    assert logs["reuse_active"] == 0.0
+    assert logs["reuse_pair_a"] == -1.0 and logs["reuse_pair_b"] == -1.0
+    assert logs["reuse_paper_mode"] == 0.0
+
+
+def test_simulate_logs_reuse_paper_mode():
+    hw = dataclasses.replace(MCM_MOE.hw, ocs_reuse_mode="paper")
+    r = simulate(MOE, REUSE_S, MCM_MOE, hw=hw)
+    logs = r.logs
+    assert logs["reuse_paper_mode"] == 1.0
+    assert logs["reuse_active"] == 1.0
+    assert logs["reuse_gated"] == 0.0
+    assert (logs["reuse_pair_a"], logs["reuse_pair_b"]) == \
+           (logs["reuse_cand_a"], logs["reuse_cand_b"])
+    a, b = int(logs["reuse_pair_a"]), int(logs["reuse_pair_b"])
+    assert PARALLELISMS[a] != PARALLELISMS[b]
+
+
+def test_simulate_logs_no_candidate():
+    s, _ = _feasible("tiny", TINY, MCM_TINY)[0]
+    r = simulate(TINY, s, MCM_TINY, fabric="ib")
+    assert r.logs["reuse_cand_a"] == -1.0
+    assert r.logs["reuse_gated"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: byte conservation (hypothesis) — dense, MoE, hybrid
+# ---------------------------------------------------------------------------
+@settings(max_examples=10)
+@given(st.sampled_from(_CASES), st.integers(0, 10 ** 6))
+def test_event_byte_conservation(case, pick):
+    name, w, mcm = case
+    grid = _feasible(name, w, mcm)
+    s = grid[pick % len(grid)][0]
+    prog = compile_step(w, s, mcm, schedule="gpipe")
+    r = replay(prog)
+    intra, inter = map_intra(w, s, mcm)
+    vols = traffic_volumes(w, s)
+    for p in PARALLELISMS:
+        segs = (1 if intra.get(p, 1) > 1 else 0) \
+            + (1 if inter.get(p, 1) > 1 else 0)
+        want = vols[p] * segs
+        got = r.bytes_moved.get(p, 0.0)
+        if want == 0.0:
+            assert got == 0.0
+        else:
+            assert got == pytest.approx(want, rel=1e-6), p
+            assert prog.bytes_expected[p] == pytest.approx(want, rel=1e-12)
+
+
+def test_event_replay_deterministic():
+    s = next(s for s, _ in _feasible("tiny", TINY, MCM_TINY) if s.pp > 1)
+    a = replay(compile_step(TINY, s, MCM_TINY, schedule="1f1b"),
+               record_timeline=True)
+    b = replay(compile_step(TINY, s, MCM_TINY, schedule="1f1b"),
+               record_timeline=True)
+    assert a.step_time == b.step_time
+    assert a.n_events == b.n_events
+    assert a.timeline == b.timeline
+    assert a.bytes_moved == b.bytes_moved
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: fidelity vs the analytic model (gpipe / 1f1b asserted)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("case", _CASES, ids=[c[0] for c in _CASES])
+def test_event_fidelity_top_points(case):
+    name, w, mcm = case
+    picks = _feasible(name, w, mcm)[:3]
+    picks += [t for t in _feasible(name, w, mcm) if t[0].pp > 1][:2]
+    for s, sim in picks:
+        for sched in ("gpipe", "1f1b"):
+            r = replay(compile_step(w, s, mcm, schedule=sched))
+            assert r.analytic_step_time == pytest.approx(sim.step_time,
+                                                         rel=1e-9)
+            assert abs(r.err) <= 0.15, (name, s, sched, r.err)
+
+
+def test_event_fidelity_with_derived_topology():
+    from repro.core.optimizer import evaluate_point
+    found = 0
+    for s, _ in _feasible("moe", MOE, MCM_MOE)[:20]:
+        pt = evaluate_point(MOE, s, MCM_MOE)
+        if pt is None or pt.topo is None or not pt.topo.dims:
+            continue
+        r = replay(compile_step(MOE, s, MCM_MOE, topo=pt.topo,
+                                schedule="gpipe"))
+        assert r.analytic_step_time == pytest.approx(pt.sim.step_time,
+                                                     rel=1e-9)
+        assert abs(r.err) <= 0.15
+        found += 1
+        if found >= 3:
+            break
+    assert found > 0
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: schedules — bubble ordering and memory behaviour
+# ---------------------------------------------------------------------------
+def _pipelined(name, w, mcm, min_nm=8):
+    for s, _ in _feasible(name, w, mcm):
+        if s.pp > 1 and s.n_micro >= max(min_nm, s.pp):
+            return s
+    pytest.skip("no pipelined strategy in grid")
+
+
+def test_schedule_bubble_ordering():
+    s = _pipelined("tiny", TINY, MCM_TINY)
+    res = {sched: replay(compile_step(TINY, s, MCM_TINY, schedule=sched))
+           for sched in SCHEDULES}
+    # gpipe and (non-interleaved) 1f1b share the same bubble ratio;
+    # interleaving over v chunks divides it
+    assert res["1f1b"].bubble == pytest.approx(res["gpipe"].bubble,
+                                               rel=0.05, abs=0.01)
+    assert res["interleaved"].bubble < 0.75 * res["gpipe"].bubble
+    assert res["interleaved"].step_time < res["gpipe"].step_time
+    # the analytic model assumes a gpipe-style bubble
+    an_bubble = simulate(TINY, s, MCM_TINY).logs["bubble"]
+    assert res["gpipe"].bubble == pytest.approx(an_bubble, rel=0.05,
+                                                abs=0.01)
+    # 1F1B's win is activation residency, not the bubble
+    assert res["1f1b"].peak_inflight <= res["gpipe"].peak_inflight
+    assert res["1f1b"].peak_inflight <= s.pp
+    assert res["gpipe"].peak_inflight == s.n_micro
+
+
+def test_schedule_op_orders_complete():
+    for sched in SCHEDULES:
+        for pp, v, nm in ((1, 1, 1), (2, 1, 8), (4, 2, 8), (8, 2, 16)):
+            if sched != "interleaved":
+                v = 1
+            for s in range(pp):
+                ops = device_op_order(sched, pp, v, nm, s)
+                assert len(ops) == 2 * nm * v
+                assert len(set(ops)) == 2 * nm * v    # each op exactly once
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: batch replay parity vs the scalar engine
+# ---------------------------------------------------------------------------
+def test_batch_replay_matches_scalar():
+    progs = []
+    for name, w, mcm in _CASES:
+        picks = _feasible(name, w, mcm)[:2]
+        picks += [t for t in _feasible(name, w, mcm) if t[0].pp > 1][:1]
+        for s, _ in picks:
+            for sched in ("gpipe", "1f1b"):
+                progs.append(compile_step(w, s, mcm, schedule=sched))
+    out = replay_batch(progs)
+    for j, p in enumerate(progs):
+        r = replay(p)
+        assert out["step_time"][j] == pytest.approx(r.step_time, rel=0.05)
+        assert out["analytic_step_time"][j] == \
+            pytest.approx(r.analytic_step_time, rel=1e-12)
+
+
+def test_batch_replay_interleaved_falls_back():
+    s = _pipelined("tiny", TINY, MCM_TINY)
+    prog = compile_step(TINY, s, MCM_TINY, schedule="interleaved")
+    out = replay_batch([prog])
+    r = replay(prog)
+    assert out["step_time"][0] == pytest.approx(r.step_time, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Wiring: Study.run(validate_top=K), Scenario fields, CLI subcommand
+# ---------------------------------------------------------------------------
+def _tiny_scenario(**kw):
+    from repro.api import Scenario
+    return Scenario(model="tinyllama_1_1b", total_tflops=1e6, seq_len=4096,
+                    global_batch=256, dies_per_mcm=(16,), m=(6,),
+                    cpo_ratio=(0.6,), fabrics=("oi",), refine_top=3,
+                    keep_top=16, **kw)
+
+
+def test_study_validate_top_stamps_records():
+    from repro.api import Study
+    sc = _tiny_scenario(validate_top=3, schedule="1f1b")
+    res = Study(sc).run()
+    stamped = [r for r in res.records
+               if "validated_step_time" in r.metrics]
+    assert len(stamped) == 3
+    for r in stamped:
+        assert r.metrics["validated_step_time"] > 0
+        assert abs(r.metrics["fidelity_err"]) <= 0.15
+    val = res.provenance["validate"]
+    assert val["n_validated"] == 3 and val["schedule"] == "1f1b"
+    assert res.timings["validate_s"] > 0
+    # argument overrides the scenario field
+    res2 = Study(_tiny_scenario()).run(validate_top=2)
+    assert sum("validated_step_time" in r.metrics
+               for r in res2.records) == 2
+
+
+def test_study_validate_roundtrips_artifact(tmp_path):
+    from repro.api import Study, StudyResult
+    res = Study(_tiny_scenario(validate_top=2)).run()
+    path = res.save(tmp_path / "res.json")
+    loaded = StudyResult.load(path)
+    assert loaded.scenario.validate_top == 2
+    stamped = [r for r in loaded.records
+               if "validated_step_time" in r.metrics]
+    assert len(stamped) == 2
+
+
+def test_scenario_rejects_bad_schedule():
+    with pytest.raises(ValueError, match="schedule"):
+        _tiny_scenario(schedule="zigzag")
+    with pytest.raises(ValueError, match="validate_top"):
+        _tiny_scenario(validate_top=-1)
+
+
+def test_validate_scenario_harness():
+    from repro.events.validate import validate_scenario
+    block = validate_scenario(_tiny_scenario(), top=2,
+                              schedules=("gpipe", "1f1b"))
+    assert block["n_points"] == 2
+    assert len(block["rows"]) == 4
+    assert all(r["ok"] for r in block["rows"])
+    for r in block["rows"]:
+        assert abs(r["err"]) <= 0.15
+
+
+def test_cli_validate_smoke(tmp_path):
+    from repro.cli import main
+    out = tmp_path / "fidelity.json"
+    rc = main(["validate", "scenarios/tinyllama_quick.json", "--quick",
+               "--out", str(out)])
+    assert rc == 0
+    import json
+    report = json.loads(out.read_text())
+    assert report["schema"] == 1
+    assert report["n_violations"] == 0
+    assert report["n_asserted"] > 0
+
+
+def test_cli_validate_top_flag(capsys):
+    from repro.cli import main
+    rc = main(["scenarios/tinyllama_quick.json", "--validate-top", "2",
+               "--quick", "--out", "artifacts/studies"])
+    assert rc == 0
+    assert "event-validated 2 records" in capsys.readouterr().out
