@@ -12,8 +12,9 @@ Tracks the two replay paths of ``repro.events``:
     PYTHONPATH=src:. python benchmarks/events_throughput.py
     PYTHONPATH=src:. python benchmarks/events_throughput.py --quick
 
-``--quick`` runs tinyllama only and exits non-zero if either path
-regresses below the checked-in floors — the CI smoke mode.
+``--quick`` runs tinyllama only and gates it on the floors owned by
+``repro.obs.bench`` (the CI smoke mode — also reachable as
+``python -m repro.cli bench check --which events --quick``).
 """
 from __future__ import annotations
 
@@ -24,19 +25,13 @@ import time
 from pathlib import Path
 
 from benchmarks.common import emit
-from repro.api import Scenario, Study
-from repro.events import compile_step, replay, replay_batch
-from repro.events.validate import _rebuild, _top_records
+from repro.api import Scenario
+from repro.events import replay, replay_batch
+from repro.obs.bench import (BATCH_K, DEFAULT_FLOORS, enforce,
+                             pipelined_programs)
 
 REPO = Path(__file__).resolve().parents[1]
 OUT = REPO / "BENCH_events.json"
-
-# CI regression floors.  Far below a warm laptop-class machine (the
-# scalar engine clears ~100k events/s, the batch path hundreds of
-# records/s) so only a real regression — a per-event Python blowup, a
-# quadratic rebalance — trips them, not a noisy shared runner.
-QUICK_FLOOR_EVENTS_PER_S = 10_000.0
-QUICK_FLOOR_BATCH_RECORDS_PER_S = 25.0
 
 MODELS = [
     ("tinyllama_1_1b", 1e6, 4096, 256),
@@ -44,43 +39,15 @@ MODELS = [
     ("mixtral_8x7b", 4e6, 8192, 256),
 ]
 
-BATCH_K = 64
-
 
 def bench_model(model: str, C: float, seq_len: int, gb: int,
                 repeats: int = 3) -> dict:
     sc = Scenario(model=model, total_tflops=C, seq_len=seq_len,
                   global_batch=gb, fabrics=("oi",), refine_top=8)
-    res = Study(sc).run()
-    idx = _top_records(res, 8)
-    built = []
-    for i in idx:
-        s, mcm, topo, fabric = _rebuild(res.records[i], sc)
-        built.append(compile_step(sc.build_workload(), s, mcm,
-                                  fabric=fabric, topo=topo,
-                                  reuse=sc.reuse, hw=sc.build_hw(),
-                                  schedule="1f1b"))
-    # time a PIPELINED program (big DAG — the realistic engine load);
-    # top records are often pp=1, so pick the best feasible pp>1 point
-    # on the winning MCM when needed
-    built.sort(key=lambda p: -(p.n_stages * p.n_micro))
-    prog = built[0]
-    if prog.n_stages == 1:
-        from repro.core.optimizer import enumerate_strategies
-        from repro.core.simulator import simulate
-        w, hw = sc.build_workload(), sc.build_hw()
-        mcm = built[0].mcm
-        best = None
-        for s in enumerate_strategies(w, mcm):
-            if s.pp <= 1:
-                continue
-            r = simulate(w, s, mcm, hw=hw)
-            if r.feasible and (best is None or r.throughput > best[1]):
-                best = (s, r.throughput)
-        if best is not None:
-            prog = compile_step(w, best[0], mcm, reuse=sc.reuse, hw=hw,
-                                schedule="1f1b")
-            built[0] = prog
+    # pipelined_programs times a PIPELINED program (big DAG — the
+    # realistic engine load); top records are often pp=1, so it picks
+    # the best feasible pp>1 point on the winning MCM when needed
+    prog, built = pipelined_programs(sc, schedule="1f1b", top=8)
 
     # scalar engine
     t_scalar, n_events = [], 0
@@ -129,23 +96,14 @@ def run(quick: bool = False) -> int:
 
     if quick:
         r = results[0]
-        rc = 0
-        if r["events_per_s"] < QUICK_FLOOR_EVENTS_PER_S:
-            print(f"FAIL: scalar engine at {r['events_per_s']:,.0f} "
-                  f"events/s < floor {QUICK_FLOOR_EVENTS_PER_S:,.0f}")
-            rc = 1
-        if r["batch_records_per_s"] < QUICK_FLOOR_BATCH_RECORDS_PER_S:
-            print(f"FAIL: batch replay at {r['batch_records_per_s']:,.0f} "
-                  f"records/s < floor "
-                  f"{QUICK_FLOOR_BATCH_RECORDS_PER_S:,.0f}")
-            rc = 1
-        if rc == 0:
-            print(f"OK: scalar {r['events_per_s']:,.0f} events/s, batch "
-                  f"{r['batch_records_per_s']:,.0f} records/s "
-                  f"({r['batch_speedup_vs_scalar']:.1f}x vs scalar)")
-        return rc                    # quick mode never rewrites JSON
+        got = enforce("events", {
+            "events_per_s": r["events_per_s"],
+            "batch_records_per_s": r["batch_records_per_s"]}, root=REPO)
+        return int(any(not row["ok"] for row in got))
+        # quick mode never rewrites JSON
 
-    payload = {"bench": "events_throughput", "results": results}
+    payload = {"bench": "events_throughput", "results": results,
+               "quick_floors": dict(DEFAULT_FLOORS["events"])}
     OUT.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"wrote {OUT}")
     return 0

@@ -23,9 +23,10 @@ Two rates are reported per path:
     PYTHONPATH=src:. python benchmarks/outer_throughput.py
     PYTHONPATH=src:. python benchmarks/outer_throughput.py --quick
 
-``--quick`` runs a shrunken tinyllama scenario and exits non-zero if the
-population path regresses below the checked-in floors — the CI smoke
-mode (it never rewrites BENCH_outer.json).
+``--quick`` runs a shrunken tinyllama scenario and gates it on the
+floors owned by ``repro.obs.bench`` (the CI smoke mode — also reachable
+as ``python -m repro.cli bench check --which outer --quick``; it never
+rewrites BENCH_outer.json).
 """
 from __future__ import annotations
 
@@ -37,16 +38,12 @@ from pathlib import Path
 
 from benchmarks.common import emit
 from repro.api import Scenario, Study
+from repro.obs.bench import (DEFAULT_FLOORS, enforce, quick_outer_scenario,
+                             scalar_outer_variant)
 
 REPO = Path(__file__).resolve().parents[1]
 OUT = REPO / "BENCH_outer.json"
 SCENARIO = REPO / "scenarios" / "paper_qwen3_outer.json"
-
-# CI regression floors (quick mode, tinyllama).  Far below a warm
-# laptop-class machine so only a real regression (a per-variant Python
-# loop, a dead cache, re-enumeration per round) trips them.
-QUICK_FLOOR_REQ_PTS_PER_S = 50_000.0
-QUICK_FLOOR_SPEEDUP = 3.0
 
 
 def _run(sc: Scenario, repeats: int = 3) -> dict:
@@ -73,17 +70,8 @@ def _run(sc: Scenario, repeats: int = 3) -> dict:
     }
 
 
-def _scalar_variant(sc: Scenario) -> Scenario:
-    kw = dict(sc.driver_kw)
-    rounds = kw.get("rounds", kw.get("outer_iters", 8))
-    return sc.replace(driver_kw={
-        "method": "scalar", "inner_method": "scalar",
-        "outer_iters": rounds,
-        "inner_budget": kw.get("inner_budget", 48)})
-
-
 def bench(sc: Scenario, repeats: int = 3) -> dict:
-    scalar = _run(_scalar_variant(sc), repeats)
+    scalar = _run(scalar_outer_variant(sc), repeats)
     pop = _run(sc, repeats)
     speedup = (pop["points_per_s_requested"]
                / scalar["points_per_s_requested"])
@@ -95,17 +83,8 @@ def bench(sc: Scenario, repeats: int = 3) -> dict:
                 if scalar["best_throughput_tok_s"] else None}
 
 
-def _quick_scenario() -> Scenario:
-    return Scenario(model="tinyllama_1_1b", total_tflops=1e5,
-                    seq_len=4096, global_batch=256, dies_per_mcm=(16,),
-                    m=(6,), cpo_ratio=(0.6,), driver="chiplight-outer",
-                    driver_kw={"rounds": 4, "walkers": 6,
-                               "inner_budget": 16},
-                    keep_top=64, name="tinyllama_outer_quick")
-
-
 def run(quick: bool = False) -> int:
-    sc = _quick_scenario() if quick else Scenario.load(SCENARIO)
+    sc = quick_outer_scenario() if quick else Scenario.load(SCENARIO)
     t0 = time.perf_counter()
     r = bench(sc)
     rows = [[r["scenario"], path, d["variants"], d["n_sim"],
@@ -124,23 +103,16 @@ def run(quick: bool = False) -> int:
           f"({time.perf_counter() - t0:.1f}s)")
 
     if quick:
-        rc = 0
-        pts = r["population"]["points_per_s_requested"]
-        if pts < QUICK_FLOOR_REQ_PTS_PER_S:
-            print(f"FAIL: population outer path at {pts:,.0f} requested "
-                  f"pts/s, floor {QUICK_FLOOR_REQ_PTS_PER_S:,.0f}")
-            rc = 1
-        if r["speedup_requested_pts_per_s"] < QUICK_FLOOR_SPEEDUP:
-            print(f"FAIL: population/scalar speedup "
-                  f"{r['speedup_requested_pts_per_s']:.1f}x below the "
-                  f"floor of {QUICK_FLOOR_SPEEDUP:.0f}x")
-            rc = 1
-        if rc == 0:
-            print(f"OK: {pts:,.0f} requested pts/s, "
-                  f"{r['speedup_requested_pts_per_s']:.1f}x vs scalar")
-        return rc                       # quick mode never rewrites JSON
+        got = enforce("outer", {
+            "points_per_s_requested":
+                r["population"]["points_per_s_requested"],
+            "speedup_requested_pts_per_s":
+                r["speedup_requested_pts_per_s"]}, root=REPO)
+        return int(any(not row["ok"] for row in got))
+        # quick mode never rewrites JSON
 
-    payload = {"bench": "outer_throughput", "results": [r]}
+    payload = {"bench": "outer_throughput", "results": [r],
+               "quick_floors": dict(DEFAULT_FLOORS["outer"])}
     OUT.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"wrote {OUT}")
     return 0

@@ -11,8 +11,16 @@ records ranked identically to the scalar-oracle refinement.
     PYTHONPATH=src:. python benchmarks/study_throughput.py
     PYTHONPATH=src:. python benchmarks/study_throughput.py --quick
 
-``--quick`` runs the tinyllama scenario only and exits non-zero if the
-study path regresses below the checked-in floor — the CI smoke mode.
+``--quick`` runs the tinyllama scenario only and gates it on the floor
+owned by ``repro.obs.bench`` (the CI smoke mode — also reachable as
+``python -m repro.cli bench check --which study --quick``).
+
+Each model is additionally timed with a host tracer installed
+(``repro.obs``), so the written snapshot records the tracing overhead:
+``tracing_overhead_frac`` (enabled vs disabled) and — when ``--baseline
+prev.json`` maps models to a pre-observability measurement from the
+SAME machine — ``tracing_off_vs_baseline`` (the "instrumentation left
+in the hot path costs nothing when disabled" acceptance number).
 """
 from __future__ import annotations
 
@@ -24,16 +32,12 @@ from pathlib import Path
 
 from benchmarks.common import emit
 from repro.api import Scenario, Study
+from repro.obs import tracing
+from repro.obs.bench import DEFAULT_FLOORS, enforce
 
 REPO = Path(__file__).resolve().parents[1]
 OUT = REPO / "BENCH_study.json"
 BASELINE = REPO / "BENCH_dse.json"
-
-# CI regression floor (points/s through Study.run()).  Deliberately far
-# below the ~200-500k pts/s a warm laptop-class machine reaches, so only
-# a real regression (an accidental per-row Python loop, a quadratic
-# keep-set, an O(N^2) Pareto pass) trips it — not a noisy shared runner.
-QUICK_FLOOR_PTS_PER_S = 30_000.0
 
 MODELS = [
     ("tinyllama_1_1b", 4096, 512),
@@ -71,10 +75,22 @@ def _refine_ranking_matches(sc: Scenario) -> bool:
     return [key(p) for p in batched] == [key(p) for p in scalar]
 
 
+def _timed_traced(study: Study) -> float:
+    t0 = time.perf_counter()
+    with tracing():
+        study.run()
+    return time.perf_counter() - t0
+
+
+def _scenario(name: str, seq_len: int, global_batch: int,
+              C: float = 4e6) -> Scenario:
+    return Scenario(model=name, total_tflops=C, seq_len=seq_len,
+                    global_batch=global_batch, fabrics=("oi",))
+
+
 def bench_model(name: str, seq_len: int, global_batch: int,
                 C: float = 4e6, repeats: int = 5) -> dict:
-    sc = Scenario(model=name, total_tflops=C, seq_len=seq_len,
-                  global_batch=global_batch, fabrics=("oi",))
+    sc = _scenario(name, seq_len, global_batch, C)
     study = Study(sc)
     res = study.run()                                       # warm-up
     t_study = min(_timed(study.run) for _ in range(repeats))
@@ -90,28 +106,54 @@ def bench_model(name: str, seq_len: int, global_batch: int,
     }
 
 
-def run(quick: bool = False) -> int:
+def bench_model_traced(r: dict, seq_len: int, global_batch: int,
+                       repeats: int = 5) -> None:
+    """Second pass: the same workload timed with a host tracer
+    installed.  Kept separate from (and run after) ALL untraced
+    timings — traced runs allocate large span lists, and the heap
+    churn they leave measurably skews untraced timings taken later in
+    the same process."""
+    study = Study(_scenario(r["model"], seq_len, global_batch,
+                            r["C_tflops"]))
+    study.run()                                             # warm-up
+    t_traced = min(_timed_traced(study) for _ in range(repeats))
+    r["traced_study_s"] = t_traced
+    r["points_per_s_traced"] = r["design_points"] / t_traced
+    r["tracing_overhead_frac"] = t_traced / r["study_s"] - 1.0
+
+
+def run(quick: bool = False, pre_obs: dict | None = None) -> int:
     base = _baseline_study_pts()
+    pre_obs = pre_obs or {}
     models = MODELS[:1] if quick else MODELS
     results = []
     for name, seq_len, gb in models:
         r = bench_model(name, seq_len, gb)
+        results.append(r)
+    for r, (name, seq_len, gb) in zip(results, models):
+        bench_model_traced(r, seq_len, gb)
+    for r in results:
+        name = r["model"]
         b = base.get(name)
         r["baseline_points_per_s_study"] = b
         r["speedup_vs_baseline"] = (r["points_per_s_study"] / b) if b \
             else None
-        results.append(r)
+        p = pre_obs.get(name)
+        r["pre_obs_points_per_s_study"] = p
+        r["tracing_off_vs_pre_obs"] = (r["points_per_s_study"] / p) \
+            if p else None
 
     rows = [[r["model"], r["design_points"],
              f"{r['study_s'] * 1e3:.1f}",
              f"{r['points_per_s_study']:.0f}",
+             f"{r['tracing_overhead_frac'] * 100:+.1f}%",
              f"{r['speedup_vs_baseline']:.1f}"
              if r["speedup_vs_baseline"] else "n/a",
              r["refine_ranking_matches_scalar"]]
             for r in results]
     emit("study_throughput", rows,
          ["model", "points", "study_ms", "points_per_s_study",
-          "speedup_vs_BENCH_dse", "refine_rank_ok"])
+          "trace_ovh", "speedup_vs_BENCH_dse", "refine_rank_ok"])
 
     rc = 0
     for r in results:
@@ -120,21 +162,20 @@ def run(quick: bool = False) -> int:
                   f"diverges from the scalar oracle")
             rc = 1
     if quick:
-        pts = results[0]["points_per_s_study"]
-        if pts < QUICK_FLOOR_PTS_PER_S:
-            print(f"FAIL: study path at {pts:,.0f} pts/s is below the "
-                  f"floor of {QUICK_FLOOR_PTS_PER_S:,.0f} pts/s")
-            rc = 1
-        else:
-            print(f"OK: study path at {pts:,.0f} pts/s "
-                  f"(floor {QUICK_FLOOR_PTS_PER_S:,.0f})")
-        return rc                        # quick mode never rewrites JSON
+        got = enforce("study", {
+            "points_per_s_study": results[0]["points_per_s_study"]},
+            root=REPO)
+        return rc or int(any(not row["ok"] for row in got))
+        # quick mode never rewrites JSON
 
     speedups = [r["speedup_vs_baseline"] for r in results
                 if r["speedup_vs_baseline"]]
     min_speedup = min(speedups) if speedups else None
     payload = {"bench": "study_throughput", "results": results,
-               "min_speedup_vs_baseline": min_speedup}
+               "min_speedup_vs_baseline": min_speedup,
+               "max_tracing_overhead_frac":
+                   max(r["tracing_overhead_frac"] for r in results),
+               "quick_floors": dict(DEFAULT_FLOORS["study"])}
     OUT.write_text(json.dumps(payload, indent=2) + "\n")
     vs = f"{min_speedup:.0f}x" if min_speedup is not None \
         else "n/a — no baseline in BENCH_dse.json"
@@ -147,8 +188,14 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="tinyllama only + regression floor (CI smoke); "
                          "does not rewrite BENCH_study.json")
+    ap.add_argument("--baseline", metavar="JSON",
+                    help="same-machine pre-observability measurement "
+                         "{model: points_per_s_study}; recorded in the "
+                         "snapshot as tracing_off_vs_pre_obs")
     args = ap.parse_args(argv)
-    return run(quick=args.quick)
+    pre = json.loads(Path(args.baseline).read_text()) \
+        if args.baseline else None
+    return run(quick=args.quick, pre_obs=pre)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from repro.api.registry import DRIVERS, OBJECTIVES
 from repro.api.result import (StudyResult, record_from_point,
                               records_from_sweep)
 from repro.api.scenario import Scenario
+from repro.obs import metrics, span
 
 
 @dataclass(frozen=True)
@@ -39,11 +40,20 @@ class Study:
         event-driven engine (``repro.events``, vectorized batch path)
         and stamped with ``validated_step_time`` / ``fidelity_err``."""
         sc = self.scenario
-        result = DRIVERS.get(sc.driver)(sc)
-        k = sc.validate_top if validate_top is None else validate_top
-        if k:
-            from repro.events.validate import stamp_validation
-            stamp_validation(result, k, schedule or sc.schedule)
+        from repro.dse.batched_sim import jax_stats
+        t0 = time.perf_counter()
+        traces0 = jax_stats()["traces"]
+        with metrics.scope() as ms, \
+                span("study.run", scenario=sc.name, driver=sc.driver):
+            result = DRIVERS.get(sc.driver)(sc)
+            k = sc.validate_top if validate_top is None else validate_top
+            if k:
+                from repro.events.validate import stamp_validation
+                with span("study.validate_top", top=k):
+                    stamp_validation(result, k, schedule or sc.schedule)
+            result.provenance["metrics"] = _metrics_block(
+                result, ms, time.perf_counter() - t0,
+                jax_stats()["traces"] - traces0)
         return result
 
 
@@ -107,14 +117,16 @@ def _run_batched(sc: Scenario, driver: str,
     space = sc.design_space(alloc_mode=alloc_mode)
     kw = _batched_driver_kw(sc, driver) if alloc_mode == "chiplight" \
         else {}
-    sweep = sweep_design_space(space, driver=driver, backend=sc.backend,
-                               seed=sc.seed, **kw)
+    with span("study.scan", driver=driver):
+        sweep = sweep_design_space(space, driver=driver,
+                                   backend=sc.backend, seed=sc.seed, **kw)
     kept = _sweep_keep_indices(sweep, sc)
     records = records_from_sweep(sweep, kept)
     t1 = time.perf_counter()
     points = []
     if sc.refine_top and len(kept):
-        points = refine_top_points(sweep, top_k=sc.refine_top)
+        with span("study.refine", top=sc.refine_top):
+            points = refine_top_points(sweep, top_k=sc.refine_top)
     records += [record_from_point(p) for p in points]
     t2 = time.perf_counter()
 
@@ -265,3 +277,34 @@ def _run_railx(sc: Scenario) -> StudyResult:
 def _provenance(sc: Scenario, **kw) -> dict:
     return {"scenario_hash": sc.scenario_hash(), "driver": sc.driver,
             "model": sc.model, **kw}
+
+
+def _metrics_block(result: StudyResult, ms: "metrics.Metrics",
+                   wall_s: float, jax_retraces: int) -> dict:
+    """The ``provenance["metrics"]`` block stamped on every run: stage
+    wall-times, points/s, cache hit rates, jax retrace count, and the
+    scoped counter/gauge snapshot (``METRICS_SCHEMA``); round-trips
+    through the StudyResult JSON artifact."""
+    prov = result.provenance
+    n_eval = int(prov.get("grid_evaluated", prov.get("n_evaluated", 0)))
+    n_sim = int(prov.get("n_sim", 0))
+    hits = int(prov.get("n_cache_hits", 0))
+    requests = int(prov.get("n_requested", n_sim + hits))
+    wall = {"total": wall_s}
+    for key, label in (("sweep_s", "sweep"), ("refine_s", "refine"),
+                       ("validate_s", "validate"),
+                       ("total_s", "driver")):
+        if key in result.timings:
+            wall[label] = float(result.timings[key])
+    snap = ms.snapshot()
+    return {
+        "schema": metrics.METRICS_SCHEMA,
+        "wall_s": wall,
+        "points_evaluated": n_eval,
+        "points_per_s": n_eval / wall_s if wall_s > 0 else 0.0,
+        "cache": {"requests": requests, "hits": hits,
+                  "hit_rate": hits / requests if requests else 0.0},
+        "jax": {"retraces": int(jax_retraces)},
+        "counters": snap["counters"],
+        "gauges": snap["gauges"],
+    }

@@ -17,14 +17,26 @@ replayed by the discrete-event engine under the requested pipeline
 schedules and compared against the analytic model, writing a versioned
 fidelity report artifact.
 
+Observability (``repro.obs``): ``--trace out.json`` on a study or
+``validate`` run writes the HOST trace (where the pipeline spent its
+wall time) as Chrome Trace Event JSON — open it in
+https://ui.perfetto.dev.  The ``timeline`` subcommand replays a
+scenario's best design point through the event engine with full
+timeline recording and writes the SIMULATED step as a Perfetto trace
+(one track per pipeline stage and per rail, OCS reconfigurations as
+instant markers).  ``bench check`` re-measures the quick benchmark
+workloads and gates them on the committed BENCH_*.json floors.
+
 Exit codes: 0 ok; 2 bad arguments; 3 when a study found NO feasible
 design point (every sweep cell infeasible); ``validate``: 1 when any
-asserted point exceeds the fidelity tolerance.
+asserted point exceeds the fidelity tolerance; ``bench check``: 1 when
+any floor is violated.
 """
 from __future__ import annotations
 
 import argparse
 import sys
+from contextlib import contextmanager
 from pathlib import Path
 from typing import List, Optional, Tuple
 
@@ -106,6 +118,9 @@ def build_parser() -> argparse.ArgumentParser:
                     help="smoke mode: first grid cell only, small budgets")
     ap.add_argument("--out", default="artifacts/studies",
                     help="output .json file (single study) or directory")
+    ap.add_argument("--trace", default=None, metavar="TRACE_JSON",
+                    help="write the host trace (Chrome Trace Event "
+                         "JSON, Perfetto-loadable) covering every study")
     return ap
 
 
@@ -217,9 +232,12 @@ def _print_study(res: StudyResult, top: int):
     val = res.provenance.get("validate")
     if val:
         err = val.get("max_abs_err")
+        fb = val.get("n_scalar_fallback", 0)
+        tail = (f", {fb}/{val['n_validated']} scalar-engine fallback"
+                if fb else "")
         print(f"  event-validated {val['n_validated']} records "
               f"({val['schedule']}): max |fidelity err| "
-              f"{err * 100:.1f}%" if err is not None else
+              f"{err * 100:.1f}%{tail}" if err is not None else
               f"  event-validated 0 records")
 
 
@@ -228,6 +246,21 @@ def _out_path(out: str, sc: Scenario, n_studies: int) -> Path:
     if p.suffix == ".json" and n_studies == 1:
         return p
     return p / f"{sc.name}.json"
+
+
+@contextmanager
+def _maybe_tracing(path: Optional[str]):
+    """Install a host tracer for the block when ``path`` is given and
+    write the Chrome trace on exit."""
+    if not path:
+        yield None
+        return
+    from repro.obs import (chrome_trace_from_tracer, tracing,
+                           write_chrome_trace)
+    with tracing() as tr:
+        yield tr
+    p = write_chrome_trace(path, chrome_trace_from_tracer(tr))
+    print(f"  wrote host trace {p} — open in https://ui.perfetto.dev")
 
 
 # ---------------------------------------------------------------------------
@@ -254,6 +287,9 @@ def build_validate_parser() -> argparse.ArgumentParser:
                          "gpipe+1f1b only")
     ap.add_argument("--out", default="artifacts/fidelity_report.json",
                     help="fidelity report JSON path")
+    ap.add_argument("--trace", default=None, metavar="TRACE_JSON",
+                    help="write the harness host trace (Chrome Trace "
+                         "Event JSON, Perfetto-loadable)")
     return ap
 
 
@@ -271,8 +307,9 @@ def main_validate(argv: List[str]) -> int:
         schedules = tuple(s for s in schedules
                           if s in ("gpipe", "1f1b")) or ("gpipe",)
     try:
-        report = validate_zoo(paths, top=top, schedules=schedules,
-                              tolerance=tol, out=args.out)
+        with _maybe_tracing(args.trace):
+            report = validate_zoo(paths, top=top, schedules=schedules,
+                                  tolerance=tol, out=args.out)
     except (ValueError, KeyError, OSError) as e:
         ap.exit(EXIT_USAGE, f"{ap.prog}: error: {e}\n")
     print(f"\n=== fidelity report: {report['n_scenarios']} scenarios, "
@@ -287,6 +324,13 @@ def main_validate(argv: List[str]) -> int:
             parts.append(f"{sched}: max|err| {worst * 100:4.1f}%")
         print(f"  {block['scenario']:24s} "
               f"({block['n_points']} pts)  " + "   ".join(parts))
+    br = report.get("batch_replay", {})
+    if br.get("records"):
+        print(f"  batch replay: {br['scalar_fallback']}/{br['records']} "
+              f"records fell back to the scalar engine "
+              f"({br['fallback_frac']:.0%})")
+    else:
+        print("  batch replay: not exercised (scalar-engine harness)")
     print(f"  wrote {args.out}")
     if report["n_violations"]:
         print(f"FAIL: {report['n_violations']} asserted replays exceed "
@@ -297,10 +341,103 @@ def main_validate(argv: List[str]) -> int:
     return EXIT_OK
 
 
+# ---------------------------------------------------------------------------
+# `timeline` subcommand — the simulated-step Perfetto trace
+# ---------------------------------------------------------------------------
+def build_timeline_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.cli timeline",
+        description="Replay a scenario's best design point through the "
+                    "event engine with full timeline recording and "
+                    "write the simulated training step as Chrome Trace "
+                    "Event JSON (one track per pipeline stage / rail; "
+                    "open in https://ui.perfetto.dev — the bubble is "
+                    "the white space).")
+    ap.add_argument("scenario", help="scenario JSON file")
+    ap.add_argument("--schedule", default="1f1b",
+                    choices=("gpipe", "1f1b", "interleaved"),
+                    help="pipeline schedule to replay")
+    ap.add_argument("--top", type=int, default=8,
+                    help="top records considered when picking the "
+                         "(preferably pipelined) point to replay")
+    ap.add_argument("--out", default=None,
+                    help="trace JSON path (default: artifacts/"
+                         "timeline_<scenario>_<schedule>.json)")
+    return ap
+
+
+def main_timeline(argv: List[str]) -> int:
+    from repro.events import replay
+    from repro.obs import (chrome_trace_from_event_result, track_idle,
+                           write_chrome_trace)
+    from repro.obs.bench import pipelined_programs
+    ap = build_timeline_parser()
+    args = ap.parse_args(argv)
+    try:
+        sc = Scenario.load(args.scenario)
+        prog, _ = pipelined_programs(sc, schedule=args.schedule,
+                                     top=args.top)
+    except (ValueError, KeyError, OSError) as e:
+        ap.exit(EXIT_USAGE, f"{ap.prog}: error: {e}\n")
+    ev = replay(prog, record_timeline=True)
+    trace = chrome_trace_from_event_result(ev, title=sc.name)
+    out = args.out or (f"artifacts/timeline_{sc.name}_"
+                       f"{args.schedule}.json")
+    path = write_chrome_trace(out, trace)
+    idle = track_idle(trace)
+    total_idle = sum(v["idle_us"] for v in idle.values())
+    total_busy = sum(v["busy_us"] for v in idle.values())
+    print(f"=== {sc.name}: schedule={ev.schedule} pp={ev.n_stages} "
+          f"n_micro={ev.n_micro} ===")
+    print(f"  step {ev.step_time * 1e3:.3f} ms  bubble {ev.bubble:.3f}  "
+          f"reconf {ev.n_reconf} (wait {ev.reconf_wait_s * 1e3:.3f} ms)")
+    print(f"  device tracks: {len(idle)}  busy {total_busy / 1e3:.3f} ms"
+          f"  idle {total_idle / 1e3:.3f} ms "
+          f"({total_idle / max(total_idle + total_busy, 1e-12):.0%})")
+    print(f"  wrote {path} — open in https://ui.perfetto.dev")
+    return EXIT_OK
+
+
+# ---------------------------------------------------------------------------
+# `bench check` subcommand — the unified BENCH_*.json floor gate
+# ---------------------------------------------------------------------------
+def build_bench_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.cli bench",
+        description="Re-measure the quick benchmark workloads and gate "
+                    "them on the committed BENCH_*.json floors "
+                    "(repro.obs.bench) — the single CI perf gate.")
+    ap.add_argument("action", choices=("check",),
+                    help="'check': measure and compare against floors")
+    ap.add_argument("--which", type=_csv(str, "--which"),
+                    default=("study", "outer", "events"),
+                    help="comma list of benches (study,outer,events)")
+    ap.add_argument("--quick", action="store_true",
+                    help="quick floors (the only supported mode; "
+                         "accepted for CI-invocation clarity)")
+    ap.add_argument("--trace", default=None, metavar="TRACE_JSON",
+                    help="write the quick study's host trace JSON")
+    return ap
+
+
+def main_bench(argv: List[str]) -> int:
+    from repro.obs.bench import run_checks
+    ap = build_bench_parser()
+    args = ap.parse_args(argv)
+    try:
+        return run_checks(tuple(args.which), trace_path=args.trace)
+    except (ValueError, KeyError, OSError) as e:
+        ap.exit(EXIT_USAGE, f"{ap.prog}: error: {e}\n")
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     argv = sys.argv[1:] if argv is None else list(argv)
     if argv and argv[0] == "validate":
         return main_validate(argv[1:])
+    if argv and argv[0] == "timeline":
+        return main_timeline(argv[1:])
+    if argv and argv[0] == "bench":
+        return main_bench(argv[1:])
     ap = build_parser()
     args = ap.parse_args(argv)
     try:
@@ -309,16 +446,17 @@ def main(argv: Optional[List[str]] = None) -> int:
         ap.exit(EXIT_USAGE, f"{ap.prog}: error: {e}\n")
 
     all_feasible = True
-    for sc in scenarios:
-        try:
-            res = Study(sc).run()
-        except ValueError as e:          # driver_kw / grid-shape misuse
-            ap.exit(EXIT_USAGE, f"{ap.prog}: error: {e}\n")
-        _print_study(res, args.top)
-        path = res.save(_out_path(args.out, sc, len(scenarios)))
-        print(f"  wrote {path}")
-        if res.best is None:
-            all_feasible = False
+    with _maybe_tracing(args.trace):
+        for sc in scenarios:
+            try:
+                res = Study(sc).run()
+            except ValueError as e:      # driver_kw / grid-shape misuse
+                ap.exit(EXIT_USAGE, f"{ap.prog}: error: {e}\n")
+            _print_study(res, args.top)
+            path = res.save(_out_path(args.out, sc, len(scenarios)))
+            print(f"  wrote {path}")
+            if res.best is None:
+                all_feasible = False
     return EXIT_OK if all_feasible else EXIT_INFEASIBLE
 
 

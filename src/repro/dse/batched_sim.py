@@ -37,6 +37,7 @@ from repro.core.hardware import HW
 from repro.core.mcm import MCMArch
 from repro.core.workload import Workload
 from repro.dse.space import P_IDX, StrategyBatch
+from repro.obs import metrics as obs_metrics
 
 
 @dataclass(frozen=True)
@@ -655,13 +656,25 @@ _JAX_TRACES = {"count": 0}
 JAX_AUTO_MIN_BATCH = 4096
 
 
+def jax_stats() -> Dict[str, int]:
+    """Public snapshot of the jit-cache perf internals: cumulative
+    ``traces`` of the point function since process start (a repeated
+    same-bucket sweep must not grow it) and the ``auto`` backend
+    crossover.  Deltas of this feed ``StudyResult.provenance.metrics``
+    (``jax.retraces``)."""
+    return {"traces": int(_JAX_TRACES["count"]),
+            "auto_min_batch": JAX_AUTO_MIN_BATCH}
+
+
 @functools.lru_cache(maxsize=64)
 def _jax_terms_fn(fabric: str, hw: HW, w_scalars: Tuple):
     import jax
     import jax.numpy as jnp
 
     def point_fn(*arrs):
+        # runs at TRACE time only — both side effects count retraces
         _JAX_TRACES["count"] += 1
+        obs_metrics.inc("batched_sim.jax_retraces")
         a = dict(zip(_TERM_KEYS, arrs))
         a["w_scalars"] = w_scalars
         return _terms_core(jnp, a, fabric, hw)
@@ -700,6 +713,9 @@ def _run_terms(a: Dict, fabric: str, hw: HW, backend: str):
         fn = _jax_terms_fn(fabric, hw, a["w_scalars"])
         B = a["vols"].shape[0]
         pad = _bucket(B) - B
+        obs_metrics.inc("batched_sim.jax_calls")
+        obs_metrics.inc("batched_sim.jax_pad_rows", pad)
+        obs_metrics.gauge("batched_sim.jax_bucket", _bucket(B))
         args = []
         for k in _TERM_KEYS:
             v = np.asarray(a[k])

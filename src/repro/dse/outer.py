@@ -39,6 +39,8 @@ from repro.core.optimizer import (DSEResult, DesignPoint, inner_search,
 from repro.core.workload import Workload
 from repro.dse.search import refine_sweep_rows, sweep_design_space
 from repro.dse.space import DesignSpace, enumerate_strategy_batch
+from repro.obs import metrics as obs_metrics
+from repro.obs import span
 
 VariantKey = Tuple[int, int, int, int, float]
 
@@ -179,13 +181,15 @@ class _OuterPopulation:
         pop = [mcm0]
         for _ in range(self.walkers - 1):
             pop.append(self._perturb(mcm0))
-        self._evaluate(pop)
-        self._record_round(0, pop)
+        with span("outer.round", round=0, walkers=len(pop)):
+            self._evaluate(pop)
+            self._record_round(0, pop)
         for r in range(1, self.rounds + 1):
-            cands = [self._candidates(m, pop) for m in pop]
-            self._evaluate([c for cs in cands for c in cs])
-            pop = [self._adopt(m, cs) for m, cs in zip(pop, cands)]
-            self._record_round(r, pop)
+            with span("outer.round", round=r, walkers=len(pop)):
+                cands = [self._candidates(m, pop) for m in pop]
+                self._evaluate([c for cs in cands for c in cs])
+                pop = [self._adopt(m, cs) for m, cs in zip(pop, cands)]
+                self._record_round(r, pop)
         best = max(self.history, key=lambda p: p.throughput, default=None)
         return DSEResult(
             best=best, frontier=pareto_front(self.history),
@@ -268,6 +272,7 @@ class _OuterPopulation:
             k = mcm_variant_key(m)
             if k in self.cache:
                 self.cache_hits += 1
+                obs_metrics.inc("outer.variant_cache.hits")
             elif k in seen:
                 pass
             elif self._usable(m):
@@ -280,6 +285,7 @@ class _OuterPopulation:
             self.n_requested += sum(
                 self.cache[mcm_variant_key(m)].grid_size for m in mcms)
             return
+        obs_metrics.inc("outer.variants_evaluated", len(new))
         space = DesignSpace(workload=self.w, mcms=tuple(new),
                             fabrics=(self.fabric,), reuse=self.reuse)
         sweep = sweep_design_space(space, driver="exhaustive",

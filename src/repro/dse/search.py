@@ -46,6 +46,8 @@ from repro.dse.pareto import (crowding_distance, nondominated_sort,
                               pareto_mask)
 from repro.dse.space import (DesignSpace, P_IDX, P_ORDER, StrategyBatch,
                              enumerate_strategy_batch)
+from repro.obs import metrics as obs_metrics
+from repro.obs import span
 
 Objective = Tuple[str, bool]          # (result field, maximize?)
 DEFAULT_OBJECTIVES: Tuple[Objective, ...] = (("throughput", True),
@@ -84,6 +86,7 @@ class BatchedEvaluator:
         self.cost = cluster_cost(mcm, None, fabric=fabric, hw=self.hw).total
         self.n_sim = 0
         self.n_hits = 0
+        self.n_fallback = 0       # rows served by the exact dict path
         self._ccols = np.zeros((0, 6), np.int64)   # raw key columns
         self._ckeys = np.zeros(0, np.uint64)       # packed, insertion order
         self._cvals = np.zeros((0, len(_RESULT_FIELDS)))
@@ -91,6 +94,15 @@ class BatchedEvaluator:
         self._cmax = np.zeros(6, np.int64)         # per-column max seen
         self._shifts: Optional[np.ndarray] = None
         self._fallback: Optional[Dict[Tuple[int, ...], np.ndarray]] = None
+
+    def stats(self) -> Dict[str, int]:
+        """Bit-packed cache counters (``repro.obs`` metric names):
+        ``dse.cache.sim`` simulator rows spent, ``dse.cache.hits``
+        rows served from cache, ``dse.cache.fallback_rows`` rows that
+        took the exact dict path (packed widths > 64 bits)."""
+        return {"dse.cache.sim": self.n_sim,
+                "dse.cache.hits": self.n_hits,
+                "dse.cache.fallback_rows": self.n_fallback}
 
     # -- uint64 key packing ------------------------------------------------
     def _ensure_widths(self, cols: np.ndarray) -> bool:
@@ -145,7 +157,10 @@ class BatchedEvaluator:
         out = np.empty((B, len(_RESULT_FIELDS)))
         qkeys = self._pack(cols)
         hit, rows = self._lookup(qkeys)
-        self.n_hits += int(hit.sum())
+        nh = int(hit.sum())
+        self.n_hits += nh
+        if nh:
+            obs_metrics.inc("dse.cache.hits", nh)
         out[hit] = self._cvals[rows]
         miss = np.nonzero(~hit)[0]
         if len(miss):
@@ -154,6 +169,7 @@ class BatchedEvaluator:
                                    self.reuse, self.hw, self.backend,
                                    alloc_mode=self.alloc_mode)
             self.n_sim += len(sub)
+            obs_metrics.inc("dse.cache.sim", len(sub))
             vals = np.stack([np.asarray(getattr(res, f), np.float64)
                              for f in _RESULT_FIELDS], 1)
             out[miss] = vals
@@ -182,6 +198,10 @@ class BatchedEvaluator:
         keys = [tuple(r) for r in cols.tolist()]
         miss = [i for i, k in enumerate(keys) if k not in self._fallback]
         self.n_hits += len(keys) - len(miss)
+        self.n_fallback += len(keys)
+        obs_metrics.inc("dse.cache.fallback_rows", len(keys))
+        if len(keys) > len(miss):
+            obs_metrics.inc("dse.cache.hits", len(keys) - len(miss))
         out = np.empty((len(keys), len(_RESULT_FIELDS)))
         if miss:
             sub = batch.take(np.array(miss, np.int64))
@@ -189,6 +209,7 @@ class BatchedEvaluator:
                                    self.reuse, self.hw, self.backend,
                                    alloc_mode=self.alloc_mode)
             self.n_sim += len(sub)
+            obs_metrics.inc("dse.cache.sim", len(sub))
             vals = np.stack([np.asarray(getattr(res, f), np.float64)
                              for f in _RESULT_FIELDS], 1)
             for j, i in enumerate(miss):
@@ -573,9 +594,19 @@ class _FusedEvaluator:
         self.n_sim = 0
         self.n_hits = 0
 
+    def stats(self) -> Dict[str, int]:
+        """Row-indexed cache counters, same names as
+        ``BatchedEvaluator.stats`` (exact cache — no fallback path)."""
+        return {"dse.cache.sim": self.n_sim,
+                "dse.cache.hits": self.n_hits,
+                "dse.cache.fallback_rows": 0}
+
     def evaluate_idx(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
         idx = np.asarray(idx, np.int64)
-        self.n_hits += int(self._have[idx].sum())
+        nh = int(self._have[idx].sum())
+        self.n_hits += nh
+        if nh:
+            obs_metrics.inc("dse.cache.hits", nh)
         miss = np.unique(idx[~self._have[idx]])
         for fc, fabric in enumerate(self.fabric_names):
             for hc, hw in enumerate(self.hw_objs):
@@ -602,6 +633,7 @@ class _FusedEvaluator:
              for f in _RESULT_FIELDS], 1)
         self._have[rows] = True
         self.n_sim += len(rows)
+        obs_metrics.inc("dse.cache.sim", len(rows))
 
 
 def _sweep_with_driver(space: DesignSpace, driver: str, backend: str,
@@ -629,22 +661,26 @@ def _sweep_with_driver(space: DesignSpace, driver: str, backend: str,
             reqs[ci] = np.asarray(next(gen), np.int64)
         except StopIteration as e:
             finals[ci] = np.asarray(e.value, np.int64)
+    n_round = 0
     while reqs:
         order = sorted(reqs)
         glob = np.concatenate([fev.offsets[ci] + reqs[ci]
                                for ci in order])
-        m = fev.evaluate_idx(glob)
-        nxt: Dict[int, np.ndarray] = {}
-        pos = 0
-        for ci in order:
-            ln = len(reqs[ci])
-            sl = {k: v[pos:pos + ln] for k, v in m.items()}
-            pos += ln
-            try:
-                nxt[ci] = np.asarray(gens[ci].send(sl), np.int64)
-            except StopIteration as e:
-                finals[ci] = np.asarray(e.value, np.int64)
+        with span("sweep.round", driver=driver, round=n_round,
+                  rows=len(glob), cells=len(order)):
+            m = fev.evaluate_idx(glob)
+            nxt: Dict[int, np.ndarray] = {}
+            pos = 0
+            for ci in order:
+                ln = len(reqs[ci])
+                sl = {k: v[pos:pos + ln] for k, v in m.items()}
+                pos += ln
+                try:
+                    nxt[ci] = np.asarray(gens[ci].send(sl), np.int64)
+                except StopIteration as e:
+                    finals[ci] = np.asarray(e.value, np.int64)
         reqs = nxt
+        n_round += 1
     glob_final = np.concatenate([fev.offsets[ci] + finals[ci]
                                  for ci in range(len(cells))])
     metrics = fev.evaluate_idx(glob_final)          # all cache hits
@@ -663,11 +699,14 @@ def sweep_design_space(space: DesignSpace, driver: str = "exhaustive",
     is one batched call per fabric, the budgeted drivers run their
     per-cell steppers in lockstep with fused per-round evaluation."""
     if driver == "exhaustive":
-        return _sweep_fused(space, backend)
+        with span("sweep", driver=driver):
+            return _sweep_fused(space, backend)
     if driver not in _STEPPERS:
         raise KeyError(f"unknown driver {driver!r}; known: "
                        f"{['exhaustive', *sorted(_STEPPERS)]}")
-    return _sweep_with_driver(space, driver, backend, seed, **driver_kw)
+    with span("sweep", driver=driver):
+        return _sweep_with_driver(space, driver, backend, seed,
+                                  **driver_kw)
 
 
 # ---------------------------------------------------------------------------
@@ -701,12 +740,13 @@ def refine_sweep_rows(sweep: SweepResult, rows, method: str = "batched"
     (not reordered).  The population outer search uses this to refine
     per-variant winners in one call."""
     rows = np.asarray(rows, np.int64)
-    if sweep.space.alloc_mode == "railx":
-        return _refine_railx(sweep, rows)
-    if method == "scalar":
-        return _refine_scalar(sweep, rows)
-    if method == "batched":
-        return _refine_batched(sweep, rows)
+    with span("refine", rows=len(rows), method=method):
+        if sweep.space.alloc_mode == "railx":
+            return _refine_railx(sweep, rows)
+        if method == "scalar":
+            return _refine_scalar(sweep, rows)
+        if method == "batched":
+            return _refine_batched(sweep, rows)
     raise ValueError(f"unknown refine method {method!r}; "
                      f"use 'batched' or 'scalar'")
 

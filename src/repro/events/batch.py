@@ -18,27 +18,43 @@ monotone stage sweep); ``gpipe`` and ``1f1b`` run fully vectorized.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Sequence
 
 import numpy as np
 
 from repro.events.dag import StepProgram, device_op_order
 from repro.events.engine import replay
+from repro.obs import metrics
 
 
 def replay_batch(programs: Sequence[StepProgram]) -> Dict[str, np.ndarray]:
     """Replay K programs; returns SoA arrays over the batch:
     ``step_time``, ``makespan_body``, ``bubble``, ``dp_exposed``,
-    ``analytic_step_time``, ``err``."""
+    ``analytic_step_time``, ``err``, plus a ``scalar_fallback`` bool
+    mask of the rows that took the scalar engine (non-vectorizable
+    schedules — counted on ``batch_replay.scalar_fallback``)."""
     K = len(programs)
     out = {k: np.zeros(K) for k in
            ("step_time", "makespan_body", "bubble", "dp_exposed",
             "analytic_step_time", "err")}
+    out["scalar_fallback"] = np.zeros(K, bool)
     if K == 0:
         return out
 
     vec_rows = [i for i, p in enumerate(programs)
                 if p.schedule in ("gpipe", "1f1b")]
+    n_fb = K - len(vec_rows)
+    metrics.inc("batch_replay.records", K)
+    if n_fb:
+        metrics.inc("batch_replay.scalar_fallback", n_fb)
+        scheds = sorted({p.schedule for i, p in enumerate(programs)
+                         if i not in set(vec_rows)})
+        warnings.warn(
+            f"replay_batch: {n_fb}/{K} programs (schedules {scheds}) "
+            f"are not expressible as a monotone stage sweep and fall "
+            f"back to the scalar event engine",
+            RuntimeWarning, stacklevel=2)
     for i, p in enumerate(programs):
         if i not in vec_rows:                 # interleaved: scalar engine
             r = replay(p)
@@ -46,6 +62,7 @@ def replay_batch(programs: Sequence[StepProgram]) -> Dict[str, np.ndarray]:
             out["makespan_body"][i] = r.makespan_body
             out["bubble"][i] = r.bubble
             out["dp_exposed"][i] = r.dp_exposed
+            out["scalar_fallback"][i] = True
     if vec_rows:
         sub = [programs[i] for i in vec_rows]
         res = _replay_wavefront(sub)

@@ -60,6 +60,14 @@ class EventResult:
     bytes_moved: Dict[str, float]   # per-parallelism, rep device
     timeline: List[Tuple[str, str, float, float]] = field(
         default_factory=list)       # (phase, label, start, end), rep stage
+    # full ``record_timeline=True`` capture, every stage (repro.obs
+    # exports these as Perfetto tracks — one per device, one per rail):
+    device_timeline: List[Tuple[int, str, str, str, float, float]] = \
+        field(default_factory=list)  # (stage, kind, phase, label, t0, t1)
+    rail_timeline: List[Tuple[str, int, str, float, float]] = field(
+        default_factory=list)        # (rail, stage, label, t0, t1)
+    reconf_events: List[Tuple[str, int, float, float]] = field(
+        default_factory=list)        # (rail, stage, t, wait_s)
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +167,10 @@ class _Replay:
         self.phase_times: Dict[str, float] = {}
         self.bytes_moved: Dict[str, float] = {}
         self.timeline: List[Tuple[str, str, float, float]] = []
+        self.device_timeline: List[Tuple[int, str, str, str,
+                                         float, float]] = []
+        self.rail_timeline: List[Tuple[str, int, str, float, float]] = []
+        self.reconf_events: List[Tuple[str, int, float, float]] = []
 
     # -- plumbing ----------------------------------------------------------
     def push(self, t: float, kind: str, data: tuple):
@@ -290,6 +302,9 @@ class _Replay:
                     - (self.now - rail.last_swap) * max(self.nm, 1))
                 self.n_reconf += 1
                 self.reconf_wait += wait
+                if self.record_timeline:
+                    self.reconf_events.append(
+                        (task.rail, s, self.now, wait))
                 rail.config = task.config
                 rail.last_swap = self.now
                 if wait > 0:
@@ -351,6 +366,14 @@ class _Replay:
         node.n_done += 1
         if task.kind == "compute":
             self.compute_active[s] -= 1
+        if self.record_timeline:
+            kind = ("dp" if node.key[0] == "D"
+                    else "compute" if task.kind == "compute" else "coll")
+            self.device_timeline.append(
+                (s, kind, task.phase, task.label, node.starts[i], self.now))
+            if task.kind != "compute":
+                self.rail_timeline.append(
+                    (task.rail, s, task.label, node.starts[i], self.now))
         if s == self.rep and node.key[0] != "D":
             self.phase_times[task.phase] = \
                 self.phase_times.get(task.phase, 0.0) \
@@ -462,7 +485,10 @@ class _Replay:
             peak_inflight=self.peak_inflight, n_events=self.n_events,
             n_reconf=self.n_reconf, reconf_wait_s=self.reconf_wait,
             phase_times=self.phase_times, link_util=link_util,
-            bytes_moved=self.bytes_moved, timeline=self.timeline)
+            bytes_moved=self.bytes_moved, timeline=self.timeline,
+            device_timeline=self.device_timeline,
+            rail_timeline=self.rail_timeline,
+            reconf_events=self.reconf_events)
 
 
 def replay(prog: StepProgram, record_timeline: bool = False,

@@ -116,9 +116,12 @@ def stamp_validation(result, top: int, schedule: str = "gpipe") -> dict:
         rec.metrics["validated_step_time"] = float(res["step_time"][j])
         rec.metrics["fidelity_err"] = float(res["err"][j])
         errs.append(abs(float(res["err"][j])))
+    n_fb = int(res["scalar_fallback"].sum())
     summary = {"n_validated": len(rows), "schedule": schedule,
                "method": "batch",
                "max_abs_err": max(errs) if errs else None,
+               "n_scalar_fallback": n_fb,
+               "scalar_fallback_frac": n_fb / len(rows) if rows else 0.0,
                "elapsed_s": time.perf_counter() - t0}
     result.provenance["validate"] = summary
     result.timings["validate_s"] = summary["elapsed_s"]
@@ -194,12 +197,21 @@ def validate_zoo(paths: Sequence = (), top: int = 4,
     """Sweep scenario JSON files (default: ``scenarios/*.json``) through
     ``validate_scenario`` and write the versioned fidelity report."""
     from repro.api import Scenario
+    from repro.obs import metrics, span
     paths = list(paths) or sorted(Path("scenarios").glob("*.json"))
     blocks = []
-    for path in paths:
-        sc = Scenario.load(path)
-        blocks.append(validate_scenario(sc, top=top, schedules=schedules,
-                                        tolerance=tolerance))
+    with metrics.scope() as ms:
+        for path in paths:
+            sc = Scenario.load(path)
+            with span("validate.scenario", scenario=sc.name):
+                blocks.append(validate_scenario(
+                    sc, top=top, schedules=schedules,
+                    tolerance=tolerance))
+    # batch-replay fallback counters observed while the harness ran
+    # (zero when every replay went through the scalar ground-truth
+    # engine — the harness default)
+    n_rec = int(ms.counters.get("batch_replay.records", 0))
+    n_fb = int(ms.counters.get("batch_replay.scalar_fallback", 0))
     rows = [r for b in blocks for r in b["rows"]]
     asserted = [r for r in rows if r["asserted"]]
     violations = [r for r in asserted if not r["ok"]]
@@ -214,6 +226,11 @@ def validate_zoo(paths: Sequence = (), top: int = 4,
         "n_violations": len(violations),
         "max_abs_err_asserted": max((abs(r["err"]) for r in asserted),
                                     default=None),
+        "batch_replay": {
+            "records": n_rec,
+            "scalar_fallback": n_fb,
+            "fallback_frac": n_fb / n_rec if n_rec else 0.0,
+        },
         "scenarios": blocks,
     }
     if out:

@@ -1,0 +1,26 @@
+"""``repro.obs`` — structured tracing, counters, Perfetto timelines.
+
+Three zero-dependency layers (see DESIGN.md §observability):
+
+* ``trace``   — contextvar-scoped nested spans with a no-op fast path;
+* ``metrics`` — named counters/gauges, scoped registries, frozen
+  JSON snapshot schema (``METRICS_SCHEMA``);
+* ``export``  — Chrome Trace Event Format JSON (Perfetto /
+  chrome://tracing) for both the host pipeline and the simulated
+  training step, plus structural validation and per-track idle
+  accounting;
+* ``bench``   — the unified BENCH_*.json floor gate behind
+  ``python -m repro.cli bench check``.
+"""
+from repro.obs.metrics import METRICS_SCHEMA, Metrics, gauge, inc, scope
+from repro.obs.trace import Tracer, current_tracer, span, tracing
+from repro.obs.export import (chrome_trace_from_event_result,
+                              chrome_trace_from_tracer, track_idle,
+                              validate_chrome_trace, write_chrome_trace)
+
+__all__ = [
+    "METRICS_SCHEMA", "Metrics", "gauge", "inc", "scope",
+    "Tracer", "current_tracer", "span", "tracing",
+    "chrome_trace_from_event_result", "chrome_trace_from_tracer",
+    "track_idle", "validate_chrome_trace", "write_chrome_trace",
+]

@@ -1,0 +1,241 @@
+"""Unified benchmark floor gate — ``python -m repro.cli bench check``.
+
+One place owns the CI regression floors that used to be duplicated as
+module constants across ``benchmarks/*.py``: the defaults below,
+overridable by a ``quick_floors`` block committed in the matching
+``BENCH_*.json`` snapshot.  ``run_checks`` re-measures each subsystem's
+quick workload fresh — the same shapes the benchmark scripts' ``--quick``
+modes time — reads the rates off ``StudyResult.provenance.metrics``
+where the study path is involved, and compares against the floors with
+one uniform pass/fail report.  The benchmark scripts delegate their
+quick-mode gating here (``enforce``), so a floor lives in exactly one
+file.
+
+Floors are deliberately far below a warm laptop-class machine so only a
+real regression — a per-row Python loop, a dead cache, a quadratic
+rebalance — trips them, not a noisy shared runner.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+DEFAULT_FLOORS: Dict[str, Dict[str, float]] = {
+    "study": {"points_per_s_study": 30_000.0},
+    "outer": {"points_per_s_requested": 50_000.0,
+              "speedup_requested_pts_per_s": 3.0},
+    "events": {"events_per_s": 10_000.0,
+               "batch_records_per_s": 25.0},
+}
+
+BENCH_FILES = {"study": "BENCH_study.json", "outer": "BENCH_outer.json",
+               "events": "BENCH_events.json"}
+
+BATCH_K = 64          # batch-replay width of the events check
+
+
+def load_floors(which: str, root: Optional[Path] = None
+                ) -> Dict[str, float]:
+    """Defaults overlaid with the ``quick_floors`` block of the
+    committed ``BENCH_<which>.json`` (when present)."""
+    if which not in DEFAULT_FLOORS:
+        raise KeyError(f"unknown bench {which!r}; known: "
+                       f"{sorted(DEFAULT_FLOORS)}")
+    floors = dict(DEFAULT_FLOORS[which])
+    path = Path(root or ".") / BENCH_FILES[which]
+    if path.exists():
+        data = json.loads(path.read_text())
+        for k, v in data.get("quick_floors", {}).items():
+            floors[k] = float(v)
+    return floors
+
+
+def enforce(which: str, measured: Dict[str, float],
+            root: Optional[Path] = None) -> List[dict]:
+    """Compare ``measured`` against the floors for ``which``; prints one
+    uniform OK/FAIL line per floor and returns the row dicts."""
+    floors = load_floors(which, root)
+    rows = []
+    for name, floor in sorted(floors.items()):
+        if name not in measured:
+            raise KeyError(f"bench {which!r}: floor {name!r} has no "
+                           f"measured value (got {sorted(measured)})")
+        value = float(measured[name])
+        ok = value >= floor
+        mark = "OK  " if ok else "FAIL"
+        print(f"  {mark} {which}.{name}: {value:,.1f} "
+              f"(floor {floor:,.1f})")
+        rows.append({"bench": which, "metric": name, "value": value,
+                     "floor": floor, "ok": ok})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Quick measurements (the shapes benchmarks/*.py --quick time)
+# ---------------------------------------------------------------------------
+def quick_study_scenario():
+    from repro.api import Scenario
+    return Scenario(model="tinyllama_1_1b", total_tflops=4e6,
+                    seq_len=4096, global_batch=512, fabrics=("oi",),
+                    name="tinyllama_study_quick")
+
+
+def quick_outer_scenario():
+    from repro.api import Scenario
+    return Scenario(model="tinyllama_1_1b", total_tflops=1e5,
+                    seq_len=4096, global_batch=256, dies_per_mcm=(16,),
+                    m=(6,), cpo_ratio=(0.6,), driver="chiplight-outer",
+                    driver_kw={"rounds": 4, "walkers": 6,
+                               "inner_budget": 16},
+                    keep_top=64, name="tinyllama_outer_quick")
+
+
+def scalar_outer_variant(sc):
+    """The pre-population single-walker flow of the same scenario."""
+    kw = dict(sc.driver_kw)
+    rounds = kw.get("rounds", kw.get("outer_iters", 8))
+    return sc.replace(driver_kw={
+        "method": "scalar", "inner_method": "scalar",
+        "outer_iters": rounds,
+        "inner_budget": kw.get("inner_budget", 48)})
+
+
+def quick_events_scenario():
+    from repro.api import Scenario
+    return Scenario(model="tinyllama_1_1b", total_tflops=1e6,
+                    seq_len=4096, global_batch=256, fabrics=("oi",),
+                    refine_top=8, name="tinyllama_events_quick")
+
+
+def pipelined_programs(sc, schedule: str = "1f1b", top: int = 8
+                       ) -> Tuple[object, List]:
+    """Compile the top records of one study into ``StepProgram``s and
+    return ``(prog, built)`` where ``prog`` is a PIPELINED program (big
+    DAG — the realistic engine load).  Top records are often pp=1, so
+    when needed the best feasible pp>1 strategy on the winning MCM is
+    substituted (also replacing ``built[0]``)."""
+    from repro.api import Study
+    from repro.events import compile_step
+    from repro.events.validate import _rebuild, _top_records
+    res = Study(sc).run()
+    built = []
+    for i in _top_records(res, top):
+        s, mcm, topo, fabric = _rebuild(res.records[i], sc)
+        built.append(compile_step(sc.build_workload(), s, mcm,
+                                  fabric=fabric, topo=topo,
+                                  reuse=sc.reuse, hw=sc.build_hw(),
+                                  schedule=schedule))
+    built.sort(key=lambda p: -(p.n_stages * p.n_micro))
+    prog = built[0]
+    if prog.n_stages == 1:
+        from repro.core.optimizer import enumerate_strategies
+        from repro.core.simulator import simulate
+        w, hw = sc.build_workload(), sc.build_hw()
+        mcm = built[0].mcm
+        best = None
+        for s in enumerate_strategies(w, mcm):
+            if s.pp <= 1:
+                continue
+            r = simulate(w, s, mcm, hw=hw)
+            if r.feasible and (best is None or r.throughput > best[1]):
+                best = (s, r.throughput)
+        if best is not None:
+            prog = compile_step(w, best[0], mcm, reuse=sc.reuse, hw=hw,
+                                schedule=schedule)
+            built[0] = prog
+    return prog, built
+
+
+def measure_study_quick(repeats: int = 3,
+                        trace_path: Optional[str] = None
+                        ) -> Dict[str, float]:
+    """Best-of-``repeats`` study throughput, read off the
+    ``provenance.metrics`` block; optionally writes the host trace of
+    the final repeat to ``trace_path``."""
+    from contextlib import nullcontext
+
+    from repro.api import Study
+    from repro.obs import (chrome_trace_from_tracer, tracing,
+                           write_chrome_trace)
+    study = Study(quick_study_scenario())
+    study.run()                                            # warm-up
+    best = 0.0
+    for i in range(repeats):
+        last = trace_path is not None and i == repeats - 1
+        with tracing() if last else nullcontext() as tr:
+            res = study.run()
+        best = max(best, res.provenance["metrics"]["points_per_s"])
+        if last:
+            write_chrome_trace(trace_path, chrome_trace_from_tracer(tr))
+            print(f"  wrote host trace {trace_path}")
+    return {"points_per_s_study": best}
+
+
+def measure_outer_quick(repeats: int = 2) -> Dict[str, float]:
+    from repro.api import Study
+
+    def rate(sc) -> float:
+        study = Study(sc)
+        best = 0.0
+        for _ in range(repeats):
+            res = study.run()
+            p = res.provenance
+            n_req = int(p.get("n_requested", p["n_sim"]))
+            best = max(best, n_req / res.timings["total_s"])
+        return best
+
+    sc = quick_outer_scenario()
+    pop = rate(sc)
+    scalar = rate(scalar_outer_variant(sc))
+    return {"points_per_s_requested": pop,
+            "speedup_requested_pts_per_s": pop / scalar}
+
+
+def measure_events_quick(repeats: int = 3) -> Dict[str, float]:
+    from repro.events import replay, replay_batch
+    prog, built = pipelined_programs(quick_events_scenario())
+    t_sc, n_events = float("inf"), 0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = replay(prog)
+        t_sc = min(t_sc, time.perf_counter() - t0)
+        n_events = r.n_events
+    programs = [built[i % len(built)] for i in range(BATCH_K)]
+    t_b = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        replay_batch(programs)
+        t_b = min(t_b, time.perf_counter() - t0)
+    return {"events_per_s": n_events / t_sc,
+            "batch_records_per_s": BATCH_K / t_b}
+
+
+_MEASURE = {"study": measure_study_quick, "outer": measure_outer_quick,
+            "events": measure_events_quick}
+
+
+def run_checks(which: Sequence[str] = ("study", "outer", "events"),
+               trace_path: Optional[str] = None,
+               root: Optional[Path] = None) -> int:
+    """Measure + enforce each requested bench; returns 0 when every
+    floor holds, 1 otherwise."""
+    bad = sorted(set(which) - set(_MEASURE))
+    if bad:
+        raise KeyError(f"unknown bench(es) {bad}; known: "
+                       f"{sorted(_MEASURE)}")
+    rows: List[dict] = []
+    for name in which:
+        print(f"bench check: {name} (quick)")
+        t0 = time.perf_counter()
+        kwargs = {"trace_path": trace_path} if name == "study" else {}
+        measured = _MEASURE[name](**kwargs)
+        rows += enforce(name, measured, root=root)
+        print(f"  ({time.perf_counter() - t0:.1f}s)")
+    n_fail = sum(not r["ok"] for r in rows)
+    if n_fail:
+        print(f"FAIL: {n_fail}/{len(rows)} floors violated")
+        return 1
+    print(f"OK: all {len(rows)} floors hold")
+    return 0
