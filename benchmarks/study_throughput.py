@@ -130,7 +130,7 @@ def run(quick: bool = False, pre_obs: dict | None = None) -> int:
     for name, seq_len, gb in models:
         r = bench_model(name, seq_len, gb)
         results.append(r)
-    for r, (name, seq_len, gb) in zip(results, models):
+    for r, (_name, seq_len, gb) in zip(results, models):
         bench_model_traced(r, seq_len, gb)
     for r in results:
         name = r["model"]

@@ -1,0 +1,36 @@
+"""chiplint — AST-based invariant analyzer for this repository.
+
+Four rule families guard the invariants the runtime parity tests can
+only sample:
+
+* ``parity-drift``   — mirrored scalar/batched/event implementations of
+                       the cost model must read the same hardware /
+                       workload attributes and use the same numeric
+                       constants (``repro.analysis.parity``);
+* ``jax-hygiene``    — functions reachable from the jax backend's
+                       traced entry points must not branch on tracer
+                       values, concretize tracers, call ``np.`` where
+                       the ``xp``/``jnp`` namespace is required, or use
+                       unhashable defaults (``repro.analysis.jax_hygiene``);
+* ``units``          — physical quantities named by the repo's suffix
+                       convention (``_bytes``/``_s``/``_flops``/...)
+                       must not be added, subtracted, or compared
+                       across units (``repro.analysis.units``);
+* ``determinism``    — no unseeded global RNG use, no mutation of
+                       frozen dataclasses, and every metrics key must
+                       be declared in the frozen ``obs.metrics`` schema
+                       (``repro.analysis.determinism``).
+
+Run via ``python -m repro.cli lint``; see DESIGN.md §analysis.
+"""
+from repro.analysis.findings import (Finding, load_baseline, save_baseline,
+                                     diff_baseline)
+from repro.analysis.parity import DEFAULT_PARITY_PAIRS, ParityPair, ParitySide
+from repro.analysis.runner import (DEFAULT_CONFIG, LintConfig, LintReport,
+                                   run_lint)
+
+__all__ = [
+    "Finding", "load_baseline", "save_baseline", "diff_baseline",
+    "ParityPair", "ParitySide", "DEFAULT_PARITY_PAIRS",
+    "LintConfig", "LintReport", "DEFAULT_CONFIG", "run_lint",
+]

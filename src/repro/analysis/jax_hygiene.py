@@ -1,0 +1,223 @@
+"""jax-hygiene — static checks on the jit/vmap-traced call graph.
+
+The jax backend's no-retrace guarantee (``dse/batched_sim.py`` shape
+buckets, ``_JAX_TRACES``-tested at runtime) only holds if the traced
+functions stay trace-friendly.  From each registered entry point this
+rule walks the intra-repo call graph and flags, in every reachable
+function:
+
+* ``branch-on-tracer``  — ``if``/``while``/``assert`` whose test reads a
+  tracer-derived value (entry parameters minus the declared static ones,
+  plus anything assigned from them);
+* ``tracer-escape``     — ``float()``/``int()``/``bool()`` over a
+  tracer-derived argument, or ``.item()``/``.tolist()`` on one — these
+  force concretization and fail (or silently constant-fold) under jit;
+* ``np-in-jit``         — calls through a NumPy module alias where the
+  backend-generic ``xp``/``jnp`` namespace is required — numpy ops
+  inside a traced function constant-fold at trace time;
+* ``unhashable-default`` — mutable default arguments (list/dict/set
+  displays or constructor calls) on reachable functions: they defeat
+  the ``lru_cache``/static-argnum hashing the jit cache keys on.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.astutil import (Module, ModuleCache, attr_chain,
+                                    names_in, walk_functions)
+from repro.analysis.findings import Finding
+
+RULE = "jax-hygiene"
+
+_CONCRETIZERS = ("float", "int", "bool")
+_ESCAPE_METHODS = ("item", "tolist")
+_NUMPY_MODULES = ("numpy", "np")
+
+
+@dataclass(frozen=True)
+class JaxEntry:
+    """A function traced by jit/vmap, with its trace-static parameters
+    (closure-like arguments that are python values, not tracers)."""
+
+    path: str
+    qualname: str
+    static_params: Tuple[str, ...] = ()
+
+
+DEFAULT_JAX_ENTRIES: Tuple[JaxEntry, ...] = (
+    # the backend-generic term core, vmapped per point under jit
+    JaxEntry(path="src/repro/dse/batched_sim.py", qualname="_terms_core",
+             static_params=("xp", "fabric", "hw")),
+    # the per-bucket traced wrapper (its side effects run at trace time)
+    JaxEntry(path="src/repro/dse/batched_sim.py",
+             qualname="_jax_terms_fn.point_fn"),
+)
+
+
+def _tainted_names(fn: ast.FunctionDef, static: Tuple[str, ...]
+                   ) -> Set[str]:
+    """Entry parameters minus the static ones, plus one forward pass of
+    assignment propagation (the traced functions are straight-line)."""
+    args = fn.args
+    params = [a.arg for a in (args.posonlyargs + args.args
+                              + args.kwonlyargs)]
+    if args.vararg:
+        params.append(args.vararg.arg)
+    if args.kwarg:
+        params.append(args.kwarg.arg)
+    tainted = {p for p in params if p not in static}
+    for node in walk_functions(fn):
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            value = node.value
+            if value is None:
+                continue
+            if not (set(names_in(value)) & tainted):
+                continue
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        tainted.add(n.id)
+    return tainted
+
+
+def _check_function(mod: Module, qual: str, fn: ast.FunctionDef,
+                    static: Tuple[str, ...], is_entry: bool,
+                    out: List[Finding]) -> None:
+    tainted = _tainted_names(fn, static)
+
+    # unhashable defaults (checked on the def itself)
+    for d in fn.args.defaults + [d for d in fn.args.kw_defaults if d]:
+        mutable = isinstance(d, (ast.List, ast.Dict, ast.Set)) or (
+            isinstance(d, ast.Call) and isinstance(d.func, ast.Name)
+            and d.func.id in ("list", "dict", "set"))
+        if mutable:
+            out.append(Finding(
+                path=mod.rel, line=d.lineno, rule=RULE, symbol=qual,
+                message="unhashable-default: mutable default argument on "
+                        "a jit-reachable function defeats the trace-cache "
+                        "hash"))
+
+    for node in walk_functions(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            test = node.test
+            kind = "if" if isinstance(node, ast.If) else "while"
+        elif isinstance(node, ast.Assert):
+            test, kind = node.test, "assert"
+        elif isinstance(node, ast.IfExp):
+            test, kind = node.test, "conditional expression"
+        else:
+            test = None
+        if test is not None:
+            hot = sorted(set(names_in(test)) & tainted)
+            if hot:
+                out.append(Finding(
+                    path=mod.rel, line=test.lineno, rule=RULE, symbol=qual,
+                    message=f"branch-on-tracer: `{kind}` tests "
+                            f"tracer-derived value(s) "
+                            f"{', '.join(hot)} — python control flow "
+                            f"retraces or fails under jit"))
+            continue
+
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        # float()/int()/bool() over a traced value
+        if isinstance(func, ast.Name) and func.id in _CONCRETIZERS:
+            hot = sorted({n for a in node.args
+                          for n in names_in(a)} & tainted)
+            if hot:
+                out.append(Finding(
+                    path=mod.rel, line=node.lineno, rule=RULE, symbol=qual,
+                    message=f"tracer-escape: `{func.id}()` concretizes "
+                            f"tracer-derived value(s) {', '.join(hot)}"))
+            continue
+        if isinstance(func, ast.Attribute):
+            # .item()/.tolist() on a traced value
+            if func.attr in _ESCAPE_METHODS:
+                hot = sorted(set(names_in(func.value)) & tainted)
+                if hot:
+                    out.append(Finding(
+                        path=mod.rel, line=node.lineno, rule=RULE,
+                        symbol=qual,
+                        message=f"tracer-escape: `.{func.attr}()` on "
+                                f"tracer-derived value(s) "
+                                f"{', '.join(hot)}"))
+                continue
+            # np.* where the xp/jnp namespace is required
+            chain = attr_chain(func)
+            if chain and len(chain) >= 2:
+                root = chain[0]
+                resolved = mod.module_aliases.get(root, "")
+                if root in _NUMPY_MODULES or resolved == "numpy" \
+                        or resolved.startswith("numpy."):
+                    out.append(Finding(
+                        path=mod.rel, line=node.lineno, rule=RULE,
+                        symbol=qual,
+                        message=f"np-in-jit: `{'.'.join(chain)}(...)` "
+                                f"inside a jit-traced path constant-"
+                                f"folds at trace time; use the xp/jnp "
+                                f"namespace"))
+
+
+def _resolve_call(cache: ModuleCache, mod: Module, call: ast.Call
+                  ) -> Optional[Tuple[Module, str]]:
+    """Resolve a call to a function defined in this repository (same
+    module, from-imported, or via a ``repro.*`` module alias)."""
+    func = call.func
+    if isinstance(func, ast.Name):
+        name = func.id
+        if name in mod.functions:
+            return mod, name
+        imp = mod.from_imports.get(name)
+        if imp and imp[0].startswith("repro"):
+            target = cache.get_by_dotted(imp[0])
+            if target and imp[1] in target.functions:
+                return target, imp[1]
+        return None
+    chain = attr_chain(func)
+    if chain and len(chain) == 2:
+        dotted = mod.module_aliases.get(chain[0])
+        if dotted and dotted.startswith("repro"):
+            target = cache.get_by_dotted(dotted)
+            if target and chain[1] in target.functions:
+                return target, chain[1]
+    return None
+
+
+def check_jax_hygiene(cache: ModuleCache,
+                      entries: Tuple[JaxEntry, ...]) -> List[Finding]:
+    out: List[Finding] = []
+    seen: Set[Tuple[str, str]] = set()
+    callees: List[Tuple[Module, str]] = []
+
+    def visit(mod: Module, qual: str, static: Tuple[str, ...],
+              is_entry: bool) -> None:
+        seen.add((mod.rel, qual))
+        fn = mod.functions[qual]
+        _check_function(mod, qual, fn, static, is_entry, out)
+        for node in walk_functions(fn):
+            if isinstance(node, ast.Call):
+                resolved = _resolve_call(cache, mod, node)
+                if resolved is not None:
+                    callees.append(resolved)
+
+    # entries first — their declared static params must win over the
+    # conservative all-tainted treatment of plain callees
+    for e in entries:
+        mod = cache.get(e.path)
+        if mod is None or e.qualname not in mod.functions:
+            out.append(Finding(
+                path=e.path, line=1, rule=RULE, symbol=e.qualname,
+                message="registered jax entry point not found"))
+            continue
+        visit(mod, e.qualname, e.static_params, True)
+    while callees:
+        tmod, tqual = callees.pop()
+        if (tmod.rel, tqual) not in seen:
+            # callees: every parameter is conservatively a tracer
+            visit(tmod, tqual, (), False)
+    return out

@@ -1,0 +1,80 @@
+"""Lint driver: configuration, rule dispatch, suppression, reporting.
+
+``run_lint(root, config)`` parses each target file once (shared
+``ModuleCache``), runs the four rule families, drops findings whose
+source line carries a matching ``# chiplint: ignore[rule]`` comment,
+and returns a ``LintReport``.  Baseline diffing lives in
+``repro.analysis.findings``; the CLI front-end in ``repro.cli``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import List, Tuple
+
+from repro.analysis.astutil import ModuleCache, is_suppressed
+from repro.analysis.determinism import (METRICS_DECL_PATH,
+                                        check_determinism)
+from repro.analysis.findings import Finding
+from repro.analysis.jax_hygiene import (DEFAULT_JAX_ENTRIES, JaxEntry,
+                                        check_jax_hygiene)
+from repro.analysis.parity import (DEFAULT_PARITY_PAIRS, ParityPair,
+                                   check_parity)
+from repro.analysis.units import check_units
+
+# units inference is scoped to the cost/performance model files where
+# the suffix convention is the contract, not incidental naming
+DEFAULT_UNITS_PATHS: Tuple[str, ...] = (
+    "src/repro/core/cost.py",
+    "src/repro/core/simulator.py",
+    "src/repro/core/network.py",
+    "src/repro/events/dag.py",
+    "src/repro/events/engine.py",
+    "src/repro/events/validate.py",
+    "src/repro/events/batch.py",
+)
+
+# determinism/schema scans the whole package
+DEFAULT_SCAN_GLOB = "src/repro/**/*.py"
+
+
+@dataclass(frozen=True)
+class LintConfig:
+    parity_pairs: Tuple[ParityPair, ...] = DEFAULT_PARITY_PAIRS
+    jax_entries: Tuple[JaxEntry, ...] = DEFAULT_JAX_ENTRIES
+    units_paths: Tuple[str, ...] = DEFAULT_UNITS_PATHS
+    scan_glob: str = DEFAULT_SCAN_GLOB
+    metrics_decl_path: str = METRICS_DECL_PATH
+
+
+DEFAULT_CONFIG = LintConfig()
+
+
+@dataclass
+class LintReport:
+    findings: List[Finding] = field(default_factory=list)
+    n_suppressed: int = 0
+    n_files: int = 0
+
+
+def run_lint(root, config: LintConfig = DEFAULT_CONFIG) -> LintReport:
+    root = Path(root)
+    cache = ModuleCache(root)
+    scan_rels = sorted(
+        p.relative_to(root).as_posix()
+        for p in root.glob(config.scan_glob) if p.is_file())
+
+    raw: List[Finding] = []
+    raw += check_parity(cache, config.parity_pairs)
+    raw += check_jax_hygiene(cache, config.jax_entries)
+    raw += check_units(cache, config.units_paths)
+    raw += check_determinism(cache, scan_rels, config.metrics_decl_path)
+
+    report = LintReport(n_files=len(scan_rels))
+    for f in sorted(raw):
+        mod = cache.get(f.path)
+        if mod is not None and is_suppressed(mod, f.line, f.rule):
+            report.n_suppressed += 1
+        else:
+            report.findings.append(f)
+    return report

@@ -138,6 +138,8 @@ class CheckpointManager:
 
     def restore(self, step: int, template: Any, shardings=None):
         path = self._step_dir(step)
+        if not (path / "COMMITTED").exists():
+            raise FileNotFoundError(f"checkpoint {path} not committed")
         names, loaded = _load_arrays(path)
         extra = {}
         state_arrays = []

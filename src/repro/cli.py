@@ -27,10 +27,17 @@ timeline recording and writes the SIMULATED step as a Perfetto trace
 instant markers).  ``bench check`` re-measures the quick benchmark
 workloads and gates them on the committed BENCH_*.json floors.
 
+``lint`` runs chiplint (``repro.analysis``), the AST-based invariant
+analyzer: parity drift between the scalar/batched/event-DAG engines,
+jax trace hygiene, physical-unit mismatches, and determinism/metric-
+schema violations — against the committed baseline
+(``chiplint_baseline.json``).
+
 Exit codes: 0 ok; 2 bad arguments; 3 when a study found NO feasible
 design point (every sweep cell infeasible); ``validate``: 1 when any
 asserted point exceeds the fidelity tolerance; ``bench check``: 1 when
-any floor is violated.
+any floor is violated; ``lint``: 1 on findings outside the baseline
+(or stale baseline entries).
 """
 from __future__ import annotations
 
@@ -61,7 +68,8 @@ def _csv(conv, what: str):
             vals = tuple(conv(t) for t in items)
         except ValueError:
             raise argparse.ArgumentTypeError(
-                f"{what} list {text!r} has a non-{conv.__name__} entry")
+                f"{what} list {text!r} has a non-{conv.__name__} "
+                f"entry") from None
         if len(set(vals)) != len(vals):
             raise argparse.ArgumentTypeError(
                 f"duplicate entries in {what} list {text!r}")
@@ -211,7 +219,7 @@ def _print_study(res: StudyResult, top: int):
         print("  no feasible design point")
         return
     shown = 0
-    for i, r in enumerate(res.records):
+    for r in res.records:
         if not r.feasible or (res.points and r.source == "refined"):
             continue
         m = r.metrics
@@ -430,6 +438,87 @@ def main_bench(argv: List[str]) -> int:
         ap.exit(EXIT_USAGE, f"{ap.prog}: error: {e}\n")
 
 
+# ---------------------------------------------------------------------------
+# `lint` subcommand — chiplint, the AST invariant analyzer
+# ---------------------------------------------------------------------------
+def build_lint_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.cli lint",
+        description="chiplint: AST-based invariant analysis "
+                    "(repro.analysis) — parity drift between the "
+                    "scalar/batched/event-DAG engines, jax trace "
+                    "hygiene, physical-unit mismatches, determinism "
+                    "and metric-schema violations.  Exit 1 on findings "
+                    "not covered by the baseline, or on stale baseline "
+                    "entries.")
+    ap.add_argument("--root", default=".",
+                    help="repository root to analyze (default: cwd)")
+    ap.add_argument("--baseline", default=None,
+                    help="grandfathered-findings file (default: "
+                         "<root>/chiplint_baseline.json; absent file "
+                         "= empty baseline)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to the current findings "
+                         "and exit 0")
+    ap.add_argument("--json", default=None, metavar="REPORT_JSON",
+                    help="also write the machine-readable findings "
+                         "report")
+    return ap
+
+
+def main_lint(argv: List[str]) -> int:
+    import json as _json
+
+    from repro.analysis import (DEFAULT_CONFIG, diff_baseline,
+                                load_baseline, save_baseline)
+    from repro.analysis.findings import DEFAULT_BASELINE, report_dict
+    from repro.analysis.runner import run_lint
+
+    ap = build_lint_parser()
+    args = ap.parse_args(argv)
+    root = Path(args.root)
+    if not root.is_dir():
+        ap.exit(EXIT_USAGE, f"{ap.prog}: error: no such directory: "
+                            f"{root}\n")
+    baseline_path = Path(args.baseline) if args.baseline \
+        else root / DEFAULT_BASELINE
+
+    report = run_lint(root, DEFAULT_CONFIG)
+    if args.update_baseline:
+        p = save_baseline(baseline_path, report.findings)
+        print(f"chiplint: baselined {len(report.findings)} finding(s) "
+              f"-> {p}")
+        return EXIT_OK
+
+    try:
+        baseline = load_baseline(baseline_path)
+    except (ValueError, OSError) as e:
+        ap.exit(EXIT_USAGE, f"{ap.prog}: error: {e}\n")
+    new, stale = diff_baseline(report.findings, baseline)
+
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(_json.dumps(
+            report_dict(report.findings, new, stale,
+                        report.n_suppressed, report.n_files),
+            indent=1) + "\n")
+        print(f"  wrote {out}")
+
+    for f in new:
+        print(f.render())
+    for fp in stale:
+        print(f"stale baseline entry (fix shipped? run "
+              f"--update-baseline): {fp}")
+    n_base = len(report.findings) - len(new)
+    print(f"chiplint: {report.n_files} files, "
+          f"{len(report.findings)} finding(s) "
+          f"({n_base} baselined, {len(new)} new, "
+          f"{report.n_suppressed} suppressed, "
+          f"{len(stale)} stale baseline)")
+    return EXIT_OK if not new and not stale else 1
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     argv = sys.argv[1:] if argv is None else list(argv)
     if argv and argv[0] == "validate":
@@ -438,6 +527,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         return main_timeline(argv[1:])
     if argv and argv[0] == "bench":
         return main_bench(argv[1:])
+    if argv and argv[0] == "lint":
+        return main_lint(argv[1:])
     ap = build_parser()
     args = ap.parse_args(argv)
     try:

@@ -468,7 +468,7 @@ class _Replay:
         busy_mean = sum(self.dev_busy) / max(self.pp, 1)
         bubble = body_end / busy_mean - 1.0 if busy_mean > 0 else 0.0
         link_util: Dict[str, float] = {}
-        for (name, s), r in self.rails.items():
+        for (name, _s), r in self.rails.items():
             if r.bytes_done > 0 and step > 0:
                 u = r.bytes_done / (r.cap * step)
                 link_util[name] = max(link_util.get(name, 0.0), u)

@@ -30,7 +30,7 @@ def tpu_compiler_params(**kwargs):
     """
     from jax.experimental.pallas import tpu as pltpu
     cls = getattr(pltpu, "CompilerParams", None) \
-        or getattr(pltpu, "TPUCompilerParams")
+        or pltpu.TPUCompilerParams
     return cls(**kwargs)
 
 

@@ -2,7 +2,7 @@
 
 Counters are monotonically increasing event counts
 (``batch_replay.scalar_fallback``, ``dse.cache.hits``); gauges are
-last-write-wins levels (``dse.jax.bucket``).  Names are dotted
+last-write-wins levels (``batched_sim.jax_bucket``).  Names are dotted
 ``<subsystem>.<noun>[.<qualifier>]`` — see DESIGN.md §observability for
 the naming discipline.
 
@@ -32,6 +32,27 @@ from repro.obs import trace as _trace
 # Frozen snapshot schema: {"schema": 1, "counters": {name: number},
 # "gauges": {name: number}}.  Bump only on incompatible change.
 METRICS_SCHEMA = 1
+
+# Declared metric names.  Every ``inc``/``gauge`` call site with a
+# literal name must use a name listed here — enforced statically by
+# ``repro.analysis`` (the determinism/schema rule), so a typo'd or
+# undeclared metric name fails `cli lint` instead of silently forking
+# the snapshot schema consumers key on.
+KNOWN_COUNTERS = frozenset({
+    "batch_replay.records",
+    "batch_replay.scalar_fallback",
+    "batched_sim.jax_calls",
+    "batched_sim.jax_pad_rows",
+    "batched_sim.jax_retraces",
+    "dse.cache.fallback_rows",
+    "dse.cache.hits",
+    "dse.cache.sim",
+    "outer.variant_cache.hits",
+    "outer.variants_evaluated",
+})
+KNOWN_GAUGES = frozenset({
+    "batched_sim.jax_bucket",
+})
 
 
 class Metrics:

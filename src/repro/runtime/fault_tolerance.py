@@ -106,6 +106,7 @@ class FaultTolerantLoop:
                 jax.block_until_ready(
                     jax.tree.leaves(metrics)[0])
                 dt = time.time() - t0
+                self.watchdog.check()
                 self.watchdog.pet()
                 self.step_times.append(dt)
                 if self._ewma is None:

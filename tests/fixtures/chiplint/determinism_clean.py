@@ -1,0 +1,23 @@
+"""determinism fixture (clean): seeded generators, declared metric
+names, no frozen mutation."""
+import dataclasses
+import random
+
+import numpy as np
+
+from repro.obs import metrics as obs_metrics
+
+
+@dataclasses.dataclass(frozen=True)
+class Cfg:
+    depth: int = 4
+
+
+def draw(seed):
+    rng = np.random.default_rng(seed)
+    r = random.Random(seed)
+    obs_metrics.inc("fixture.count")
+    obs_metrics.gauge("fixture.level", 3.0)
+    cfg = Cfg(depth=8)
+    widened = dataclasses.replace(cfg, depth=cfg.depth * 2)
+    return rng.random() + r.random(), widened

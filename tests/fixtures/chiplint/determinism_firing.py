@@ -1,0 +1,24 @@
+"""determinism fixture (firing): one finding per sub-check.
+
+Line numbers matter — tests assert findings land on the marked lines.
+"""
+import dataclasses
+import random
+
+import numpy as np
+
+from repro.obs import metrics as obs_metrics
+
+
+@dataclasses.dataclass(frozen=True)
+class Cfg:
+    depth: int = 4
+
+
+def draw():
+    x = random.random()              # global-rng stdlib (line 19)
+    y = np.random.rand(3)            # global-rng numpy legacy (line 20)
+    obs_metrics.inc("not.declared")  # unknown-metric (line 21)
+    cfg = Cfg(depth=8)
+    cfg.depth = 16                   # frozen-mutation (line 23)
+    return x, y, cfg

@@ -1,0 +1,9 @@
+"""jax-hygiene fixture (clean): branches only on static params, stays
+inside the xp namespace, hashable defaults."""
+
+
+def terms(xp, x, hw):
+    y = x * 2.0
+    if hw == "nvlink":          # static param: fine
+        y = y + 1.0
+    return xp.maximum(y, 0.0)

@@ -1,0 +1,17 @@
+"""jax-hygiene fixture (firing): one finding per sub-check.
+
+Line numbers matter — tests assert findings land on the marked lines.
+"""
+import numpy as np
+
+
+def terms(xp, x, hw):
+    y = x * 2.0
+    if y > 0:                    # branch-on-tracer (line 10)
+        y = float(x)             # tracer-escape (line 11)
+    z = np.exp(y)                # np-in-jit (line 12)
+    return helper(z)
+
+
+def helper(a, opts={}):          # unhashable-default (line 16)
+    return a

@@ -1,0 +1,6 @@
+"""Parity fixture, side A (clean): mirrors parity_b exactly."""
+
+
+def cost(w, hw):
+    act = w.tokens * w.d_model
+    return act / hw.bw_gbps + 12.0 * hw.hop_latency_s

@@ -1,0 +1,8 @@
+"""Parity fixture, side A (drifted): reads one extra hw attribute and
+changed the 12.0 constant to 13.0 — both must be findings."""
+
+
+def cost(w, hw):
+    act = w.tokens * w.d_model
+    base = act / hw.bw_gbps + 13.0 * hw.hop_latency_s
+    return base * hw.derate

@@ -1,0 +1,6 @@
+"""Parity fixture, side B: the batched mirror of parity_a's cost()."""
+
+
+def cost_batch(w, hw):
+    act = w.tokens * w.d_model
+    return act / hw.bw_gbps + 12.0 * hw.hop_latency_s

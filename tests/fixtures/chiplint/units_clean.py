@@ -1,0 +1,9 @@
+"""units fixture (clean): same-unit arithmetic and unit-transparent
+wrappers only."""
+
+
+def combine(a_bytes, b_bytes, lat_s, jitter_s):
+    total_bytes = a_bytes + b_bytes
+    t_s = lat_s + jitter_s
+    worst_s = max(lat_s, jitter_s)
+    return total_bytes, t_s, worst_s

@@ -1,0 +1,12 @@
+"""units fixture (firing): one finding per sub-check.
+
+Line numbers matter — tests assert findings land on the marked lines.
+"""
+
+
+def mix(total_bytes, lat_s, cap_gb):
+    bad = total_bytes + lat_s        # `+` bytes vs s (line 8)
+    if total_bytes > lat_s:          # comparison bytes vs s (line 9)
+        bad = bad * 2.0
+    size_gb = total_bytes            # GB name, bytes value (line 11)
+    return bad, size_gb, cap_gb

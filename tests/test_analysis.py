@@ -1,0 +1,310 @@
+"""chiplint (repro.analysis) — golden fixture tests per rule family,
+baseline semantics, suppressions, and the repo-wide baseline-exact gate.
+
+Fixture snippets live in tests/fixtures/chiplint/; each family has one
+firing and one clean snippet, and the firing ones pin exact line
+numbers so a finding that drifts off its source line fails here.
+"""
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (DEFAULT_PARITY_PAIRS, LintConfig, ParityPair,
+                            ParitySide, diff_baseline, load_baseline,
+                            run_lint, save_baseline)
+from repro.analysis.findings import Finding
+from repro.analysis.jax_hygiene import JaxEntry
+from repro.cli import main as cli_main
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "chiplint"
+
+# a config that disables every family; tests switch on one at a time
+_OFF = dict(parity_pairs=(), jax_entries=(), units_paths=(),
+            scan_glob="no_such_dir/**/*.py",
+            metrics_decl_path="no_such_file.py")
+
+
+def _tree(tmp_path, mapping):
+    """Materialize {relpath: fixture-name-or-text} under tmp_path."""
+    for rel, src in mapping.items():
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        if (FIXTURES / src).is_file():
+            shutil.copy(FIXTURES / src, dst)
+        else:
+            dst.write_text(src)
+    return tmp_path
+
+
+def _findings(report, rule=None):
+    return [f for f in report.findings
+            if rule is None or f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# parity-drift
+# ---------------------------------------------------------------------------
+def _parity_cfg(a_file):
+    pair = ParityPair(
+        name="fixture",
+        a=ParitySide(path=a_file, functions=("cost",),
+                     roles=(("w", "workload"), ("hw", "hw"))),
+        b=ParitySide(path="b.py", functions=("cost_batch",),
+                     roles=(("w", "workload"), ("hw", "hw"))))
+    return LintConfig(**{**_OFF, "parity_pairs": (pair,)})
+
+
+def test_parity_clean(tmp_path):
+    root = _tree(tmp_path, {"a.py": "parity_a_clean.py",
+                            "b.py": "parity_b.py"})
+    report = run_lint(root, _parity_cfg("a.py"))
+    assert report.findings == []
+
+
+def test_parity_drift_fires_at_line(tmp_path):
+    root = _tree(tmp_path, {"a.py": "parity_a_drift.py",
+                            "b.py": "parity_b.py"})
+    report = run_lint(root, _parity_cfg("a.py"))
+    got = {(f.path, f.line) for f in _findings(report, "parity-drift")}
+    # extra attr read on the drifted side, at its occurrence line
+    assert ("a.py", 8) in got
+    # 13.0 has no mirror (a side), and b's 12.0 is now unmatched
+    assert ("a.py", 7) in got
+    assert ("b.py", 6) in got
+    msgs = " ".join(f.message for f in report.findings)
+    assert "hw.derate" in msgs and "13" in msgs and "12" in msgs
+
+
+def test_parity_missing_function_is_reported(tmp_path):
+    root = _tree(tmp_path, {"a.py": "def other():\n    pass\n",
+                            "b.py": "parity_b.py"})
+    report = run_lint(root, _parity_cfg("a.py"))
+    assert any("not found" in f.message for f in report.findings)
+
+
+def test_seeded_drift_in_real_registered_pair(tmp_path):
+    """The acceptance scenario: a one-token constant edit to a REAL
+    registered pair (traffic_volumes) is a finding at that file:line."""
+    files = ("src/repro/core/traffic.py", "src/repro/dse/batched_sim.py")
+    for rel in files:
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(REPO_ROOT / rel, dst)
+    traffic = tmp_path / files[0]
+    src = traffic.read_text()
+    needle = "8.0 * layers_per_stage"
+    assert needle in src
+    edit_line = next(i for i, ln in enumerate(src.splitlines(), 1)
+                     if needle in ln)
+    traffic.write_text(src.replace(needle, "9.0 * layers_per_stage"))
+
+    pair = next(p for p in DEFAULT_PARITY_PAIRS
+                if p.name == "traffic_volumes")
+    report = run_lint(tmp_path, LintConfig(**{**_OFF,
+                                              "parity_pairs": (pair,)}))
+    assert any(f.path == files[0] and f.line == edit_line
+               and "9" in f.message for f in report.findings), \
+        [f.render() for f in report.findings]
+    # and the batched side's 8.0 is now unmatched too
+    assert any(f.path == files[1] and "8" in f.message
+               for f in report.findings)
+
+
+# ---------------------------------------------------------------------------
+# jax-hygiene
+# ---------------------------------------------------------------------------
+def _jax_cfg(path):
+    entry = JaxEntry(path=path, qualname="terms",
+                     static_params=("xp", "hw"))
+    return LintConfig(**{**_OFF, "jax_entries": (entry,)})
+
+
+def test_jax_clean(tmp_path):
+    root = _tree(tmp_path, {"k.py": "jax_clean.py"})
+    report = run_lint(root, _jax_cfg("k.py"))
+    assert report.findings == []
+
+
+def test_jax_firing_all_subchecks_at_lines(tmp_path):
+    root = _tree(tmp_path, {"k.py": "jax_firing.py"})
+    report = run_lint(root, _jax_cfg("k.py"))
+    by_line = {f.line: f.message for f in _findings(report, "jax-hygiene")}
+    assert 10 in by_line and "branch-on-tracer" in by_line[10]
+    assert 11 in by_line and "tracer-escape" in by_line[11]
+    assert 12 in by_line and "np-in-jit" in by_line[12]
+    # helper() is reachable from the entry, so its mutable default fires
+    assert 16 in by_line and "unhashable-default" in by_line[16]
+
+
+def test_jax_missing_entry_is_reported(tmp_path):
+    root = _tree(tmp_path, {"k.py": "def other(x):\n    return x\n"})
+    report = run_lint(root, _jax_cfg("k.py"))
+    assert any("entry point not found" in f.message
+               for f in report.findings)
+
+
+# ---------------------------------------------------------------------------
+# units
+# ---------------------------------------------------------------------------
+def _units_cfg(*paths):
+    return LintConfig(**{**_OFF, "units_paths": tuple(paths)})
+
+
+def test_units_clean(tmp_path):
+    root = _tree(tmp_path, {"u.py": "units_clean.py"})
+    report = run_lint(root, _units_cfg("u.py"))
+    assert report.findings == []
+
+
+def test_units_firing_all_subchecks_at_lines(tmp_path):
+    root = _tree(tmp_path, {"u.py": "units_firing.py"})
+    report = run_lint(root, _units_cfg("u.py"))
+    by_line = {f.line: f.message for f in _findings(report, "units")}
+    assert 8 in by_line and "`+`" in by_line[8] \
+        and "bytes" in by_line[8] and "`s`" in by_line[8]
+    assert 9 in by_line and "comparison" in by_line[9]
+    assert 11 in by_line and "assignment" in by_line[11] \
+        and "GB" in by_line[11]
+
+
+def test_units_propagates_through_assignment(tmp_path):
+    src = ("def f(n_bytes, lat_s):\n"
+           "    total = n_bytes * 2.0\n"
+           "    return total + lat_s\n")
+    root = _tree(tmp_path, {"u.py": src})
+    report = run_lint(root, _units_cfg("u.py"))
+    # total inherits no unit from a * expression: must NOT fire
+    assert report.findings == []
+    src2 = ("def f(n_bytes, lat_s):\n"
+            "    total = n_bytes\n"
+            "    return total + lat_s\n")
+    root2 = _tree(tmp_path / "t2", {"u.py": src2})
+    report2 = run_lint(root2, _units_cfg("u.py"))
+    assert len(_findings(report2, "units")) == 1
+    assert report2.findings[0].line == 3
+
+
+# ---------------------------------------------------------------------------
+# determinism / schema
+# ---------------------------------------------------------------------------
+def _det_tree(tmp_path, snippet):
+    return _tree(tmp_path, {
+        "src/repro/obs/metrics.py": "metrics_decl.py",
+        "src/repro/mod.py": snippet,
+    })
+
+
+_DET_CFG = LintConfig(**{**_OFF, "scan_glob": "src/repro/**/*.py",
+                         "metrics_decl_path": "src/repro/obs/metrics.py"})
+
+
+def test_determinism_clean(tmp_path):
+    root = _det_tree(tmp_path, "determinism_clean.py")
+    report = run_lint(root, _DET_CFG)
+    assert report.findings == []
+
+
+def test_determinism_firing_all_subchecks_at_lines(tmp_path):
+    root = _det_tree(tmp_path, "determinism_firing.py")
+    report = run_lint(root, _DET_CFG)
+    by_line = {f.line: f.message
+               for f in _findings(report, "determinism")}
+    assert 19 in by_line and "global-rng" in by_line[19] \
+        and "random.random" in by_line[19]
+    assert 20 in by_line and "np.random.rand" in by_line[20]
+    assert 21 in by_line and "unknown-metric" in by_line[21] \
+        and "not.declared" in by_line[21]
+    assert 23 in by_line and "frozen-mutation" in by_line[23]
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+def test_inline_suppression_named_and_bare(tmp_path):
+    src = ("def mix(total_bytes, lat_s):\n"
+           "    a = total_bytes + lat_s  # chiplint: ignore[units]\n"
+           "    b = total_bytes - lat_s  # chiplint: ignore\n"
+           "    c = total_bytes + lat_s  # chiplint: ignore[parity-drift]\n"
+           "    return a, b, c\n")
+    root = _tree(tmp_path, {"u.py": src})
+    report = run_lint(root, _units_cfg("u.py"))
+    # lines 2 and 3 suppressed (named match + bare); line 4 names a
+    # different rule, so the units finding survives
+    assert report.n_suppressed == 2
+    assert [f.line for f in report.findings] == [4]
+
+
+# ---------------------------------------------------------------------------
+# baseline semantics
+# ---------------------------------------------------------------------------
+def _f(path="x.py", line=3, rule="units", message="m", symbol="f"):
+    return Finding(path=path, line=line, rule=rule, message=message,
+                   symbol=symbol)
+
+
+def test_baseline_roundtrip_and_multiset_diff(tmp_path):
+    f1, f2 = _f(line=3), _f(line=9)      # same fingerprint, two sites
+    g = _f(rule="determinism", message="other")
+    p = save_baseline(tmp_path / "b.json", [f1, g])
+    base = load_baseline(p)
+
+    # exact: one of the duplicate pair is new, g is covered
+    new, stale = diff_baseline([f1, f2, g], base)
+    assert new == [f2] and stale == []
+    # both fixed: baseline entries go stale
+    new, stale = diff_baseline([], base)
+    assert new == [] and sorted(stale) == sorted(
+        [f1.fingerprint, g.fingerprint])
+    # line moves don't count as new (fingerprint excludes line)
+    new, stale = diff_baseline([_f(line=77), g], base)
+    assert new == [] and stale == []
+
+
+def test_load_baseline_missing_and_bad_schema(tmp_path):
+    assert load_baseline(tmp_path / "absent.json") == {}
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"schema": 99, "findings": []}')
+    with pytest.raises(ValueError):
+        load_baseline(bad)
+
+
+# ---------------------------------------------------------------------------
+# the repo-wide gate (tier-1): current tree must be baseline-exact
+# ---------------------------------------------------------------------------
+def test_repo_is_baseline_exact():
+    report = run_lint(REPO_ROOT)
+    base = load_baseline(REPO_ROOT / "chiplint_baseline.json")
+    new, stale = diff_baseline(report.findings, base)
+    assert new == [], "chiplint found NEW findings:\n" + "\n".join(
+        f.render() for f in new)
+    assert stale == [], ("baseline entries with no matching finding "
+                         "(fix shipped? update the baseline):\n"
+                         + "\n".join(stale))
+    assert report.n_files > 80     # the scan actually covered the tree
+
+
+def test_cli_lint_exit_codes(tmp_path, capsys):
+    assert cli_main(["lint", "--root", str(REPO_ROOT),
+                     "--json", str(tmp_path / "r.json")]) == 0
+    out = capsys.readouterr().out
+    assert "chiplint:" in out
+    assert (tmp_path / "r.json").is_file()
+    # a tree with findings and no baseline exits 1 (the default config
+    # scans src/repro/**, so the firing determinism fixture is covered;
+    # the registered-but-absent parity/jax functions also report)
+    root = _tree(tmp_path / "t", {
+        "src/repro/obs/metrics.py": "metrics_decl.py",
+        "src/repro/mod.py": "determinism_firing.py",
+    })
+    assert cli_main(["lint", "--root", str(root)]) == 1
+    capsys.readouterr()
+    # ...--update-baseline grandfathers them, then lint exits 0
+    assert cli_main(["lint", "--root", str(root),
+                     "--update-baseline"]) == 0
+    assert cli_main(["lint", "--root", str(root)]) == 0
+    # fixing the findings makes the baseline stale -> exit 1 again
+    (root / "src/repro/mod.py").write_text("def ok():\n    return 0\n")
+    assert cli_main(["lint", "--root", str(root)]) == 1
+    capsys.readouterr()

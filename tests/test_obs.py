@@ -107,7 +107,7 @@ def test_disabled_span_allocates_nothing():
             pass
     tracemalloc.start()
     before = tracemalloc.take_snapshot()
-    for i in range(1000):
+    for _ in range(1000):
         with span("hot"):
             pass
     after = tracemalloc.take_snapshot()
