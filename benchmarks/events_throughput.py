@@ -4,16 +4,22 @@ Tracks the two replay paths of ``repro.events``:
 
 * scalar discrete-event engine — replays/s and events/s on one compiled
   program per model (the fidelity-harness ground truth);
-* vectorized batch replay — records/s when K replicated top records are
-  replayed through the NumPy wavefront at once (the path
-  ``Study.run(validate_top=K)`` stamps records with), and its speedup
-  over K scalar replays.
+* vectorized batch replay — records/s through each wavefront backend
+  (``numpy`` and ``jax``) of ``replay_batch`` (the path
+  ``Study.run(validate_top=K)`` and the outer search's fused per-round
+  event replay go through), at K=64 and K=1024.
+
+Both batch loads are measured per model: the DEEPEST feasible
+interleaved pipeline replicated K times (the worst-case wavefront DAG —
+the headline ``batch_records_per_s`` rows and the per-backend speedups),
+and the mixed top-8-records batch (the ``validate_top`` shape).
 
     PYTHONPATH=src:. python benchmarks/events_throughput.py
     PYTHONPATH=src:. python benchmarks/events_throughput.py --quick
+    PYTHONPATH=src:. python benchmarks/events_throughput.py --backend jax
 
-``--quick`` runs tinyllama only and gates it on the floors owned by
-``repro.obs.bench`` (the CI smoke mode — also reachable as
+``--quick`` runs tinyllama only and gates BOTH backends on the floors
+owned by ``repro.obs.bench`` (the CI smoke mode — also reachable as
 ``python -m repro.cli bench check --which events --quick``).
 """
 from __future__ import annotations
@@ -28,7 +34,7 @@ from benchmarks.common import emit
 from repro.api import Scenario
 from repro.events import replay, replay_batch
 from repro.obs.bench import (BATCH_K, DEFAULT_FLOORS, enforce,
-                             pipelined_programs)
+                             measure_events_quick, pipelined_programs)
 
 REPO = Path(__file__).resolve().parents[1]
 OUT = REPO / "BENCH_events.json"
@@ -39,68 +45,93 @@ MODELS = [
     ("mixtral_8x7b", 4e6, 8192, 256),
 ]
 
+BATCH_KS = (BATCH_K, 1024)
+
+
+def _batch_rate(programs, backend: str, repeats: int) -> float:
+    """Best-of-``repeats`` records/s; the first (untimed) call pays any
+    jax trace so the rate reflects steady-state dispatch."""
+    replay_batch(programs, backend=backend)
+    t_b = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        replay_batch(programs, backend=backend)
+        t_b = min(t_b, time.perf_counter() - t0)
+    return len(programs) / t_b
+
 
 def bench_model(model: str, C: float, seq_len: int, gb: int,
-                repeats: int = 3) -> dict:
+                backends, repeats: int = 3) -> dict:
     sc = Scenario(model=model, total_tflops=C, seq_len=seq_len,
                   global_batch=gb, fabrics=("oi",), refine_top=8)
-    # pipelined_programs times a PIPELINED program (big DAG — the
-    # realistic engine load); top records are often pp=1, so it picks
-    # the best feasible pp>1 point on the winning MCM when needed
-    prog, built = pipelined_programs(sc, schedule="1f1b", top=8)
+    # the deepest feasible interleaved pipeline: the worst-case
+    # wavefront DAG (largest level count), replicated K times
+    deep, _ = pipelined_programs(sc, schedule="interleaved", top=8,
+                                 deep=True)
+    # the mixed top-records batch Study.run(validate_top=K) replays
+    _, built = pipelined_programs(sc, schedule="1f1b", top=8)
+    mixed = [built[i % len(built)] for i in range(BATCH_K)]
 
-    # scalar engine
-    t_scalar, n_events = [], 0
+    # scalar engine on the deep program (the fidelity ground truth for
+    # the same DAG the batch rows replay)
+    t_sc, n_events = float("inf"), 0
     for _ in range(repeats):
         t0 = time.perf_counter()
-        r = replay(prog)
-        t_scalar.append(time.perf_counter() - t0)
+        r = replay(deep)
+        t_sc = min(t_sc, time.perf_counter() - t0)
         n_events = r.n_events
-    t_sc = min(t_scalar)
 
-    # batch replay over K replicated records
-    programs = [built[i % len(built)] for i in range(BATCH_K)]
-    t_batch = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        replay_batch(programs)
-        t_batch.append(time.perf_counter() - t0)
-    t_b = min(t_batch)
+    batch = {b: {str(K): _batch_rate([deep] * K, b, repeats)
+                 for K in BATCH_KS} for b in backends}
+    mixed_rates = {b: _batch_rate(mixed, b, repeats) for b in backends}
 
-    return {
+    res = {
         "model": model, "C_tflops": C,
-        "pp": prog.n_stages, "n_micro": prog.n_micro,
+        "schedule": deep.schedule, "pp": deep.n_stages, "v": deep.v,
+        "n_micro": deep.n_micro,
         "n_events": n_events,
         "scalar_replay_s": t_sc,
         "events_per_s": n_events / t_sc,
-        "batch_k": BATCH_K,
-        "batch_s": t_b,
-        "batch_records_per_s": BATCH_K / t_b,
-        "batch_speedup_vs_scalar": (t_sc * BATCH_K) / t_b,
+        "batch_k": list(BATCH_KS),
+        "batch_records_per_s": batch,
+        "mixed_top8_records_per_s": mixed_rates,
     }
+    if "numpy" in batch:
+        res["batch_speedup_vs_scalar"] = \
+            batch["numpy"][str(BATCH_K)] * t_sc
+    if "numpy" in batch and "jax" in batch:
+        for K in BATCH_KS:
+            res[f"jax_speedup_k{K}"] = (batch["jax"][str(K)]
+                                        / batch["numpy"][str(K)])
+    return res
 
 
-def run(quick: bool = False) -> int:
-    models = MODELS[:1] if quick else MODELS
-    results = [bench_model(*m) for m in models]
-
-    rows = [[r["model"], f"pp{r['pp']}xnm{r['n_micro']}", r["n_events"],
-             f"{r['scalar_replay_s'] * 1e3:.1f}",
-             f"{r['events_per_s']:.0f}",
-             f"{r['batch_records_per_s']:.0f}",
-             f"{r['batch_speedup_vs_scalar']:.1f}"]
-            for r in results]
-    emit("events_throughput", rows,
-         ["model", "shape", "events", "scalar_ms", "events_per_s",
-          "batch_rec_per_s", "batch_speedup"])
-
+def run(quick: bool = False, backend: str = "both") -> int:
     if quick:
-        r = results[0]
-        got = enforce("events", {
-            "events_per_s": r["events_per_s"],
-            "batch_records_per_s": r["batch_records_per_s"]}, root=REPO)
+        # same measurement + floors as `cli bench check --which events`:
+        # scalar engine + BOTH backends on the K=64 top-records batch
+        got = enforce("events", measure_events_quick(), root=REPO)
         return int(any(not row["ok"] for row in got))
         # quick mode never rewrites JSON
+
+    backends = ("numpy", "jax") if backend == "both" else (backend,)
+    results = [bench_model(*m, backends=backends) for m in MODELS]
+
+    rows = []
+    for r in results:
+        for b in backends:
+            rows.append(
+                [r["model"], b,
+                 f"pp{r['pp']}xv{r['v']}xnm{r['n_micro']}",
+                 r["n_events"], f"{r['events_per_s']:.0f}"]
+                + [f"{r['batch_records_per_s'][b][str(K)]:.0f}"
+                   for K in BATCH_KS]
+                + [f"{r.get(f'jax_speedup_k{BATCH_KS[0]}', 0):.1f}"
+                   if b == "jax" else ""])
+    emit("events_throughput", rows,
+         ["model", "backend", "deep_shape", "events", "events_per_s"]
+         + [f"batch_rec_per_s_k{K}" for K in BATCH_KS]
+         + ["jax_speedup_k64"])
 
     payload = {"bench": "events_throughput", "results": results,
                "quick_floors": dict(DEFAULT_FLOORS["events"])}
@@ -112,10 +143,14 @@ def run(quick: bool = False) -> int:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
-                    help="tinyllama only + regression floors (CI smoke); "
-                         "does not rewrite BENCH_events.json")
+                    help="tinyllama only, both backends + regression "
+                         "floors (CI smoke); does not rewrite "
+                         "BENCH_events.json")
+    ap.add_argument("--backend", default="both",
+                    choices=("numpy", "jax", "auto", "both"),
+                    help="wavefront backend(s) to measure in full mode")
     args = ap.parse_args(argv)
-    return run(quick=args.quick)
+    return run(quick=args.quick, backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -53,6 +53,10 @@ DEFAULT_JAX_ENTRIES: Tuple[JaxEntry, ...] = (
     # the per-bucket traced wrapper (its side effects run at trace time)
     JaxEntry(path="src/repro/dse/batched_sim.py",
              qualname="_jax_terms_fn.point_fn"),
+    # the event-replay wavefront: the level recurrence is unrolled at
+    # trace time from the shape tables, so only `rows` is a tracer
+    JaxEntry(path="src/repro/events/batch.py",
+             qualname="_jax_shape_fn.batch_fn"),
 )
 
 

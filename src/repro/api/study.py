@@ -50,7 +50,8 @@ class Study:
             if k:
                 from repro.events.validate import stamp_validation
                 with span("study.validate_top", top=k):
-                    stamp_validation(result, k, schedule or sc.schedule)
+                    stamp_validation(result, k, schedule or sc.schedule,
+                                     backend=sc.backend)
             result.provenance["metrics"] = _metrics_block(
                 result, ms, time.perf_counter() - t0,
                 jax_stats()["traces"] - traces0)
@@ -210,12 +211,14 @@ def _run_outer(sc: Scenario) -> StudyResult:
     inner_budget = kw.pop("inner_budget", 48)
     inner_method = kw.pop("inner_method", "batched")
     refine_per_variant = kw.pop("refine_per_variant", 8)
+    event_replay = kw.pop("event_replay", 0)
+    event_schedule = kw.pop("event_schedule", "1f1b")
     if kw:
         raise ValueError(
             f"driver 'chiplight-outer' does not accept driver_kw "
-            f"{sorted(kw)}; accepted: ['inner_budget', 'inner_method', "
-            f"'method', 'outer_iters', 'refine_per_variant', 'rounds', "
-            f"'walkers']")
+            f"{sorted(kw)}; accepted: ['event_replay', 'event_schedule', "
+            f"'inner_budget', 'inner_method', 'method', 'outer_iters', "
+            f"'refine_per_variant', 'rounds', 'walkers']")
     # knobs that only exist on the OTHER method would be silent no-ops
     dropped = ("refine_per_variant" if method == "scalar"
                else "inner_method")
@@ -229,7 +232,8 @@ def _run_outer(sc: Scenario) -> StudyResult:
         rounds=rounds, walkers=walkers, inner_budget=inner_budget,
         fabric=sc.fabrics[0], reuse=sc.reuse, hw=sc.build_hw(),
         seed=sc.seed, method=method, inner_method=inner_method,
-        refine_per_variant=refine_per_variant, backend=sc.backend)
+        refine_per_variant=refine_per_variant, backend=sc.backend,
+        event_replay=event_replay, event_schedule=event_schedule)
     engine = ("core.chiplight_optimize" if method == "scalar"
               else "dse.outer_search[population]")
     source = "scalar" if method == "scalar" else "refined"

@@ -19,7 +19,14 @@ population form:
     winners in one batch;
   * an evaluation cache keyed by the MCM-variant key makes revisited
     architectures free;
-  * each walker greedily adopts its best candidate (or stays).
+  * each walker greedily adopts its best candidate (or stays);
+  * optionally (``event_replay=K``), each round's candidate winners are
+    compiled into ``StepProgram``s and replayed through ONE vectorized
+    ``repro.events.batch.replay_batch`` wavefront call, and walkers
+    adopt by the event-resolved throughput instead of the analytic one
+    — the event engine as a first-class search objective.  Off by
+    default: ``event_replay=0`` is bit-identical to the pre-hook
+    search.
 
 ``method="scalar"`` is the original single-walker nested loop,
 bit-identical to the pre-population ``chiplight_optimize`` for the same
@@ -52,12 +59,21 @@ def mcm_variant_key(mcm: MCMArch) -> VariantKey:
 
 @dataclass
 class VariantEval:
-    """Cached inner-search outcome of one MCM variant."""
+    """Cached inner-search outcome of one MCM variant.
+
+    ``event_step_time`` / ``event_thpt`` are stamped by the fused
+    per-round event replay (``outer_search(event_replay=K)``): the
+    event-resolved step time of the variant's best replayed point and
+    its event-corrected throughput (analytic throughput rescaled by
+    analytic/event step time).  Zero when the hook is off or no point
+    of the variant compiled."""
 
     mcm: MCMArch
     best: Optional[DesignPoint]
     points: List[DesignPoint]
     grid_size: int
+    event_step_time: Optional[float] = None
+    event_thpt: float = 0.0
 
     @property
     def best_thpt(self) -> float:
@@ -72,7 +88,9 @@ def outer_search(w: Workload, total_tflops: float,
                  method: str = "population",
                  inner_method: str = "batched",
                  refine_per_variant: int = 8,
-                 backend: str = "numpy") -> DSEResult:
+                 backend: str = "numpy",
+                 event_replay: int = 0,
+                 event_schedule: str = "1f1b") -> DSEResult:
     """Outer MCM-architecture search at constant cluster compute C.
 
     ``method="population"`` (default) runs ``walkers`` walkers for
@@ -84,7 +102,22 @@ def outer_search(w: Workload, total_tflops: float,
     treatment), reproducing the legacy ``chiplight_optimize`` trace
     bit-identically for the same seed.  ``outer_trace`` has
     ``rounds + 1`` entries either way — one per evaluation round.
+
+    ``event_replay=K`` (population only) turns on the fused per-round
+    event replay: each newly evaluated variant's top-K refined winners
+    are compiled under ``event_schedule`` and replayed in ONE batched
+    wavefront call (``backend`` picks its implementation); walkers then
+    adopt by event-resolved throughput.
     """
+    if event_replay:
+        from repro.events.dag import SCHEDULES
+        if event_schedule not in SCHEDULES:
+            raise ValueError(f"unknown event_schedule "
+                             f"{event_schedule!r}; known: "
+                             f"{list(SCHEDULES)}")
+        if method == "scalar":
+            raise ValueError("event_replay requires method='population' "
+                             "(the scalar path has no fused rounds)")
     if method == "scalar":
         if walkers != 1:
             raise ValueError(f"method='scalar' is the single-walker "
@@ -99,7 +132,8 @@ def outer_search(w: Workload, total_tflops: float,
         raise ValueError(f"walkers must be >= 1, got {walkers}")
     return _OuterPopulation(w, total_tflops, dies_per_mcm, m0, rounds,
                             inner_budget, walkers, fabric, reuse, hw,
-                            seed, cpo0, refine_per_variant, backend).run()
+                            seed, cpo0, refine_per_variant, backend,
+                            event_replay, event_schedule).run()
 
 
 # ---------------------------------------------------------------------------
@@ -151,7 +185,8 @@ class _OuterPopulation:
                  dies_per_mcm: int, m0: int, rounds: int,
                  inner_budget: int, walkers: int, fabric: str,
                  reuse: bool, hw: HW, seed: int, cpo0: float,
-                 refine_per_variant: int, backend: str):
+                 refine_per_variant: int, backend: str,
+                 event_replay: int = 0, event_schedule: str = "1f1b"):
         self.w = w
         self.total_tflops = total_tflops
         self.dies_per_mcm = dies_per_mcm
@@ -165,6 +200,9 @@ class _OuterPopulation:
         self.cpo0 = cpo0
         self.refine_per_variant = refine_per_variant
         self.backend = backend
+        self.event_replay = event_replay
+        self.event_schedule = event_schedule
+        self.n_event_replayed = 0
         self.rng = np.random.default_rng(seed)
         self.cache: Dict[VariantKey, VariantEval] = {}
         self.history: List[DesignPoint] = []
@@ -198,7 +236,8 @@ class _OuterPopulation:
                    "n_rounds": self.rounds + 1,
                    "n_variants": len(self.cache),
                    "n_cache_hits": self.cache_hits,
-                   "n_refined": self.n_refined})
+                   "n_refined": self.n_refined,
+                   "n_event_replayed": self.n_event_replayed})
 
     def _usable(self, mcm: MCMArch) -> bool:
         return mcm.feasible() and (self.fabric != "oi"
@@ -241,6 +280,11 @@ class _OuterPopulation:
                 out.append(c)
         return out
 
+    def _rank_thpt(self, ev: VariantEval) -> float:
+        """Adoption key: event-resolved throughput when the fused
+        per-round replay is on, the analytic one otherwise."""
+        return ev.event_thpt if self.event_replay else ev.best_thpt
+
     def _adopt(self, cur: MCMArch, cands: List[MCMArch]) -> MCMArch:
         """Greedy: move to the best-throughput candidate, stay otherwise
         (first-max tie-break; a walker with no feasible point anywhere
@@ -249,11 +293,12 @@ class _OuterPopulation:
         if not cands:
             return cur
         best_c = max(cands,
-                     key=lambda m: self.cache[mcm_variant_key(m)].best_thpt)
+                     key=lambda m: self._rank_thpt(
+                         self.cache[mcm_variant_key(m)]))
         best_ev = self.cache[mcm_variant_key(best_c)]
         if cur_ev.best is None and best_ev.best is None:
             return cands[0]
-        if best_ev.best_thpt > cur_ev.best_thpt:
+        if self._rank_thpt(best_ev) > self._rank_thpt(cur_ev):
             return best_c
         return cur
 
@@ -327,10 +372,47 @@ class _OuterPopulation:
             self.cache[k] = VariantEval(m, best, pts,
                                         int(grid_sizes[i]))
             self.history.extend(pts)
+        if self.event_replay:
+            self._event_replay([self.cache[mcm_variant_key(m)]
+                                for m in new])
         # search-requested volume: every variant the walkers asked for
         # this call, whether freshly simulated or served by the cache
         self.n_requested += sum(
             self.cache[mcm_variant_key(m)].grid_size for m in mcms)
+
+    def _event_replay(self, evs: List[VariantEval]) -> None:
+        """Fused per-round event replay: compile the round's candidate
+        winners (top ``event_replay`` refined points per new variant)
+        into ``StepProgram``s and replay them in ONE vectorized
+        wavefront call, then stamp each point's logs with the
+        event-resolved step time and each variant with its best
+        event-corrected throughput."""
+        from repro.events.batch import replay_batch
+        from repro.events.dag import compile_step
+        progs, owners = [], []
+        for ev in evs:
+            for p in ev.points[: self.event_replay]:
+                try:
+                    progs.append(compile_step(
+                        self.w, p.strategy, p.mcm, fabric=p.fabric,
+                        topo=p.topo, reuse=self.reuse, hw=self.hw,
+                        schedule=self.event_schedule))
+                except ValueError:
+                    continue      # infeasible under the scalar oracle
+                owners.append((ev, p))
+        if not progs:
+            return
+        res = replay_batch(progs, backend=self.backend)
+        obs_metrics.inc("outer.event_replayed", len(progs))
+        self.n_event_replayed += len(progs)
+        for j, (ev, p) in enumerate(owners):
+            st = float(res["step_time"][j])
+            p.sim.logs["event_step_time"] = st
+            p.sim.logs["event_err"] = float(res["err"][j])
+            thpt = (p.throughput * p.sim.step_time / st) if st > 0 else 0.0
+            if thpt > ev.event_thpt:
+                ev.event_thpt = thpt
+                ev.event_step_time = st
 
     # -- trace -------------------------------------------------------------
     def _record_round(self, r: int, pop: List[MCMArch]) -> None:
@@ -340,11 +422,17 @@ class _OuterPopulation:
         for mcm in pop:
             k = mcm_variant_key(mcm)
             ev = self.cache[k]
-            walkers.append({
+            row = {
                 "mcm": list(k),
                 "best_thpt": float(ev.best_thpt),
                 "bottleneck": ev.best.sim.bottleneck if ev.best else "none",
-            })
+            }
+            # event keys only when the hook is on — the legacy trace
+            # stays schema-identical with event_replay=0
+            if self.event_replay:
+                row["event_thpt"] = float(ev.event_thpt)
+                row["event_step_time"] = ev.event_step_time
+            walkers.append(row)
             if k not in seen:
                 seen.add(k)
                 pop_pts.extend(ev.points)

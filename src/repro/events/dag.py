@@ -126,6 +126,17 @@ class StepProgram:
     def dp_cost(self) -> float:
         return sum(self.task_cost(t) for t in self.dp_tasks)
 
+    def spans(self) -> Tuple[float, float, float, float]:
+        """(fwd span, bwd span, dp cost, dp overlap credit), memoized
+        per instance: batch replay reads these once per record and the
+        Python task walk would otherwise dominate its setup."""
+        cached = self.__dict__.get("_span_cache")
+        if cached is None:
+            cached = (self.node_span("fwd"), self.node_span("bwd"),
+                      self.dp_cost(), self.dp_overlap)
+            object.__setattr__(self, "_span_cache", cached)
+        return cached
+
 
 # ---------------------------------------------------------------------------
 # Compilation

@@ -91,10 +91,13 @@ def _top_records(result, top: int) -> List[int]:
 # ---------------------------------------------------------------------------
 # Study integration (batch replay — off the critical path)
 # ---------------------------------------------------------------------------
-def stamp_validation(result, top: int, schedule: str = "gpipe") -> dict:
+def stamp_validation(result, top: int, schedule: str = "gpipe",
+                     backend: str = "auto") -> dict:
     """Replay the top-``top`` records of ``result`` and stamp each with
     ``validated_step_time`` / ``fidelity_err``; returns (and attaches to
-    ``result.provenance['validate']``) a summary block."""
+    ``result.provenance['validate']``) a summary block.  ``backend``
+    picks the wavefront implementation (``numpy`` | ``jax`` | ``auto``,
+    see ``repro.events.batch``)."""
     t0 = time.perf_counter()
     sc = result.scenario
     idx = _top_records(result, top)
@@ -109,7 +112,7 @@ def stamp_validation(result, top: int, schedule: str = "gpipe") -> dict:
             rows.append(i)
         except ValueError:
             continue                  # infeasible under the scalar oracle
-    res = replay_batch(programs)
+    res = replay_batch(programs, backend=backend)
     errs = []
     for j, i in enumerate(rows):
         rec = result.records[i]
@@ -118,7 +121,7 @@ def stamp_validation(result, top: int, schedule: str = "gpipe") -> dict:
         errs.append(abs(float(res["err"][j])))
     n_fb = int(res["scalar_fallback"].sum())
     summary = {"n_validated": len(rows), "schedule": schedule,
-               "method": "batch",
+               "method": "batch", "backend": backend,
                "max_abs_err": max(errs) if errs else None,
                "n_scalar_fallback": n_fb,
                "scalar_fallback_frac": n_fb / len(rows) if rows else 0.0,

@@ -39,6 +39,9 @@ METRICS_SCHEMA = 1
 # undeclared metric name fails `cli lint` instead of silently forking
 # the snapshot schema consumers key on.
 KNOWN_COUNTERS = frozenset({
+    "batch_replay.jax_calls",
+    "batch_replay.jax_pad_rows",
+    "batch_replay.jax_retraces",
     "batch_replay.records",
     "batch_replay.scalar_fallback",
     "batched_sim.jax_calls",
@@ -47,10 +50,12 @@ KNOWN_COUNTERS = frozenset({
     "dse.cache.fallback_rows",
     "dse.cache.hits",
     "dse.cache.sim",
+    "outer.event_replayed",
     "outer.variant_cache.hits",
     "outer.variants_evaluated",
 })
 KNOWN_GAUGES = frozenset({
+    "batch_replay.jax_bucket",
     "batched_sim.jax_bucket",
 })
 

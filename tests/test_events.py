@@ -240,12 +240,82 @@ def test_batch_replay_matches_scalar():
             pytest.approx(r.analytic_step_time, rel=1e-12)
 
 
-def test_batch_replay_interleaved_falls_back():
+def test_batch_replay_interleaved_vectorized():
+    """Interleaved runs through the SAME vectorized wavefront as
+    gpipe/1f1b — the level-table recurrence resolves its chunk-wrap
+    dependencies, so there is no scalar fallback to hide behind."""
     s = _pipelined("tiny", TINY, MCM_TINY)
     prog = compile_step(TINY, s, MCM_TINY, schedule="interleaved")
-    out = replay_batch([prog])
+    out = replay_batch([prog] * 3)
+    assert not out["scalar_fallback"].any()
     r = replay(prog)
-    assert out["step_time"][0] == pytest.approx(r.step_time, rel=1e-12)
+    assert out["step_time"][0] == pytest.approx(r.step_time, rel=0.05)
+    assert out["bubble"][0] == pytest.approx(r.bubble, rel=0.05, abs=0.01)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([c[0] for c in _CASES]), st.integers(0, 10 ** 6))
+def test_batch_replay_interleaved_parity(name, pick):
+    """Batch-vs-scalar parity for interleaved schedules across the
+    feasible pipelined grid — previously vacuous (the fallback WAS the
+    scalar engine), now a real recurrence-parity pin."""
+    _, w, mcm = next(c for c in _CASES if c[0] == name)
+    grid = [t for t in _feasible(name, w, mcm) if t[0].pp > 1]
+    if not grid:
+        return
+    s = grid[pick % len(grid)][0]
+    prog = compile_step(w, s, mcm, schedule="interleaved")
+    out = replay_batch([prog])
+    assert not out["scalar_fallback"].any()
+    r = replay(prog)
+    assert out["step_time"][0] == pytest.approx(r.step_time, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: jax wavefront backend — parity, bucketing, auto resolution
+# ---------------------------------------------------------------------------
+def _jax_ok() -> bool:
+    from repro.dse.batched_sim import _jax_available
+    return _jax_available()
+
+
+@pytest.mark.skipif(not _jax_ok(), reason="jax not installed")
+def test_batch_replay_jax_matches_numpy():
+    progs = []
+    s = _pipelined("tiny", TINY, MCM_TINY)
+    for sched in SCHEDULES:
+        progs.append(compile_step(TINY, s, MCM_TINY, schedule=sched))
+    progs += [compile_step(TINY, t[0], MCM_TINY, schedule="gpipe")
+              for t in _feasible("tiny", TINY, MCM_TINY)[:3]]
+    rn = replay_batch(progs, backend="numpy")
+    rj = replay_batch(progs, backend="jax")
+    for k in ("step_time", "makespan_body", "bubble", "dp_exposed"):
+        np.testing.assert_allclose(rj[k], rn[k], rtol=1e-6, atol=0.0,
+                                   err_msg=k)
+    np.testing.assert_allclose(rj["err"], rn["err"], rtol=1e-6)
+
+
+@pytest.mark.skipif(not _jax_ok(), reason="jax not installed")
+def test_batch_replay_jax_same_bucket_no_retrace():
+    from repro.events import batch as eb
+    s = _pipelined("tiny", TINY, MCM_TINY)
+    progs = [compile_step(TINY, s, MCM_TINY, schedule="1f1b")] * 40
+    replay_batch(progs, backend="jax")
+    before = eb._JAX_TRACES["count"]
+    for n in range(33, 41):           # same power-of-two bucket (64)
+        replay_batch(progs[:n], backend="jax")
+    assert eb._JAX_TRACES["count"] == before
+
+
+def test_batch_replay_backend_resolution():
+    from repro.events.batch import JAX_AUTO_MIN_RECORDS, resolve_backend
+    assert resolve_backend("numpy", 10 ** 9) == "numpy"
+    assert resolve_backend("jax", 1) == "jax"
+    assert resolve_backend("auto", JAX_AUTO_MIN_RECORDS - 1) == "numpy"
+    if _jax_ok():
+        assert resolve_backend("auto", JAX_AUTO_MIN_RECORDS) == "jax"
+    with pytest.raises(ValueError, match="backend"):
+        resolve_backend("zigzag", 4)
 
 
 # ---------------------------------------------------------------------------
@@ -271,11 +341,38 @@ def test_study_validate_top_stamps_records():
         assert abs(r.metrics["fidelity_err"]) <= 0.15
     val = res.provenance["validate"]
     assert val["n_validated"] == 3 and val["schedule"] == "1f1b"
+    assert val["backend"] == sc.backend
     assert res.timings["validate_s"] > 0
     # argument overrides the scenario field
     res2 = Study(_tiny_scenario()).run(validate_top=2)
     assert sum("validated_step_time" in r.metrics
                for r in res2.records) == 2
+
+
+def test_outer_event_replay_hook():
+    from repro.api import Study
+    sc = _tiny_scenario(driver="chiplight-outer",
+                        driver_kw={"rounds": 1, "walkers": 2,
+                                   "event_replay": 2})
+    res = Study(sc).run()
+    assert res.provenance["n_event_replayed"] > 0
+    assert res.provenance["metrics"]["counters"][
+        "outer.event_replayed"] == res.provenance["n_event_replayed"]
+    w = res.traces[-1]["walkers"][0]
+    assert w["event_thpt"] > 0 and w["event_step_time"] > 0
+    # default off: legacy trace schema, no replays
+    r0 = Study(sc.replace(driver_kw={"rounds": 1, "walkers": 2})).run()
+    assert "event_thpt" not in r0.traces[-1]["walkers"][0]
+    assert r0.provenance["n_event_replayed"] == 0
+
+
+def test_outer_event_replay_rejects_scalar():
+    from repro.dse.outer import outer_search
+    with pytest.raises(ValueError, match="event_replay"):
+        outer_search(TINY, 1e6, method="scalar", walkers=1,
+                     event_replay=2)
+    with pytest.raises(ValueError, match="event_schedule"):
+        outer_search(TINY, 1e6, event_replay=2, event_schedule="zigzag")
 
 
 def test_study_validate_roundtrips_artifact(tmp_path):

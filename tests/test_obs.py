@@ -266,9 +266,9 @@ def test_driver_sweep_populates_cache_counters():
 
 
 # ---------------------------------------------------------------------------
-# Satellite: observable interleaved scalar fallback in batch replay
+# Satellite: interleaved batch replay is vectorized — no fallback left
 # ---------------------------------------------------------------------------
-def test_batch_replay_fallback_counter_and_warning():
+def test_batch_replay_interleaved_no_fallback_counter():
     s = _pipelined()
     progs = [compile_step(TINY, s, MCM_TINY, schedule="interleaved"),
              compile_step(TINY, s, MCM_TINY, schedule="1f1b")]
@@ -276,12 +276,12 @@ def test_batch_replay_fallback_counter_and_warning():
         with warnings.catch_warnings(record=True) as caught:
             warnings.simplefilter("always")
             out = replay_batch(progs)
-    assert out["scalar_fallback"].tolist() == [True, False]
+    assert out["scalar_fallback"].tolist() == [False, False]
     assert m.counters["batch_replay.records"] == 2
-    assert m.counters["batch_replay.scalar_fallback"] == 1
-    msgs = [w for w in caught if issubclass(w.category, RuntimeWarning)
-            and "scalar event engine" in str(w.message)]
-    assert len(msgs) == 1                    # one warning per batch
+    assert "batch_replay.scalar_fallback" not in m.counters
+    assert not [w for w in caught
+                if issubclass(w.category, RuntimeWarning)
+                and "scalar event engine" in str(w.message)]
 
 
 def test_batch_replay_vectorized_has_no_fallback():
