@@ -7,9 +7,15 @@ Tracks the two replay paths of ``repro.events``:
 * vectorized batch replay — records/s through each wavefront backend
   (``numpy`` and ``jax``) of ``replay_batch`` (the path
   ``Study.run(validate_top=K)`` and the outer search's fused per-round
-  event replay go through), at K=64 and K=1024.
+  event replay go through), at K=64 and K=1024;
+* fused compile+replay — the END-TO-END event stage: the vectorized
+  record->program compiler (``events.compile_batch``) plus batch replay
+  on the ``auto`` backend, against the compile-per-record baseline
+  (K ``compile_step`` DAG walks + one ``replay_batch``) on the same
+  K=64 top-records set.  ``fused_speedup_k64`` is the headline the
+  schedule-search re-rank stage rides on (target >= 10x per model).
 
-Both batch loads are measured per model: the DEEPEST feasible
+The replay-only batch loads are measured per model: the DEEPEST feasible
 interleaved pipeline replicated K times (the worst-case wavefront DAG —
 the headline ``batch_records_per_s`` rows and the per-backend speedups),
 and the mixed top-8-records batch (the ``validate_top`` shape).
@@ -34,7 +40,8 @@ from benchmarks.common import emit
 from repro.api import Scenario
 from repro.events import replay, replay_batch
 from repro.obs.bench import (BATCH_K, DEFAULT_FLOORS, enforce,
-                             measure_events_quick, pipelined_programs)
+                             measure_events_quick, pipelined_programs,
+                             top_record_batch)
 
 REPO = Path(__file__).resolve().parents[1]
 OUT = REPO / "BENCH_events.json"
@@ -58,6 +65,40 @@ def _batch_rate(programs, backend: str, repeats: int) -> float:
         replay_batch(programs, backend=backend)
         t_b = min(t_b, time.perf_counter() - t0)
     return len(programs) / t_b
+
+
+def _fused_vs_baseline(sc: Scenario, repeats: int) -> dict:
+    """End-to-end event-stage throughput at K=64 on the study's top
+    records: fused (``compile_batch`` + replay) vs the per-record
+    baseline (K ``compile_step`` walks + one ``replay_batch``), both on
+    the production ``auto`` backend."""
+    from repro.events.compile_batch import compile_batch
+    from repro.events.dag import compile_step
+    w, hw, ss, mcms, topos, fabs = top_record_batch(sc, k=BATCH_K)
+
+    def fused():
+        cb = compile_batch(w, ss, mcms, fabric=fabs, topos=topos,
+                           reuse=sc.reuse, hw=hw, schedule="1f1b")
+        cb.replay(backend="auto")
+
+    def baseline():
+        progs = [compile_step(w, s, m, fabric=f, topo=t, reuse=sc.reuse,
+                              hw=hw, schedule="1f1b")
+                 for s, m, t, f in zip(ss, mcms, topos, fabs)]
+        replay_batch(progs, backend="auto")
+
+    out = {}
+    for name, fn in (("fused", fused), ("per_record", baseline)):
+        fn()                        # warm (jax trace at the auto bucket)
+        t = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            t = min(t, time.perf_counter() - t0)
+        out[f"{name}_compile_replay_per_s"] = BATCH_K / t
+    out["fused_speedup_k64"] = (out["fused_compile_replay_per_s"]
+                                / out["per_record_compile_replay_per_s"])
+    return out
 
 
 def bench_model(model: str, C: float, seq_len: int, gb: int,
@@ -84,6 +125,7 @@ def bench_model(model: str, C: float, seq_len: int, gb: int,
     batch = {b: {str(K): _batch_rate([deep] * K, b, repeats)
                  for K in BATCH_KS} for b in backends}
     mixed_rates = {b: _batch_rate(mixed, b, repeats) for b in backends}
+    fused = _fused_vs_baseline(sc, repeats)
 
     res = {
         "model": model, "C_tflops": C,
@@ -95,6 +137,7 @@ def bench_model(model: str, C: float, seq_len: int, gb: int,
         "batch_k": list(BATCH_KS),
         "batch_records_per_s": batch,
         "mixed_top8_records_per_s": mixed_rates,
+        **fused,
     }
     if "numpy" in batch:
         res["batch_speedup_vs_scalar"] = \
@@ -127,11 +170,15 @@ def run(quick: bool = False, backend: str = "both") -> int:
                 + [f"{r['batch_records_per_s'][b][str(K)]:.0f}"
                    for K in BATCH_KS]
                 + [f"{r.get(f'jax_speedup_k{BATCH_KS[0]}', 0):.1f}"
-                   if b == "jax" else ""])
+                   if b == "jax" else ""]
+                + ([f"{r['fused_compile_replay_per_s']:.0f}",
+                    f"{r['fused_speedup_k64']:.1f}"]
+                   if b == backends[0] else ["", ""]))
     emit("events_throughput", rows,
          ["model", "backend", "deep_shape", "events", "events_per_s"]
          + [f"batch_rec_per_s_k{K}" for K in BATCH_KS]
-         + ["jax_speedup_k64"])
+         + ["jax_speedup_k64", "fused_rec_per_s_k64",
+            "fused_speedup_k64"])
 
     payload = {"bench": "events_throughput", "results": results,
                "quick_floors": dict(DEFAULT_FLOORS["events"])}

@@ -372,4 +372,47 @@ DEFAULT_PARITY_PAIRS: Tuple[ParityPair, ...] = (
         # constants are checked via the dedicated ignore lists below
         check_consts=False,
     ),
+    # ---- vectorized record->program compiler vs the scalar DAG walk ---
+    # compile_batch replicates compile_step's spans/collectives in SoA
+    # form (runtime twin: the 1e-9 pin in tests/test_events.py); a unit
+    # cost edited on one side without the other drifts here
+    ParityPair(
+        name="compile_step~compile_batch",
+        a=ParitySide(
+            path="src/repro/events/dag.py",
+            functions=("compile_step",),
+            roles=_SCAL_SIM,
+            ignore_attrs=(
+                "mcm.hw",
+                "strategy.degree",          # per-point dict lookup
+                # the batch reads these via hbm_demand_batch's
+                # local_params column
+                "workload.nonexpert_params",
+                "workload.expert_params",
+                # the scalar twin is the mcm.intra_ring_bw(deg) method;
+                # the SoA carries it as nop_bw + explicit dilution
+                "mcm.intra_ring_bw",
+            ),
+            include_nested=True,
+        ),
+        b=ParitySide(
+            path="src/repro/events/compile_batch.py",
+            functions=("compile_batch", "_compile_group"),
+            roles=_BATCH_ROLES,
+            ignore_attrs=(
+                "mcm.hw",
+                # feasibility gating: compile_step only sees points
+                # simulate() already gated and raises otherwise; the
+                # batch marks the row infeasible instead
+                "strategy.n_devices",
+                "mcm.hbm_capacity",
+                "mcm.nop_bw",               # intra_ring_bw twin (above)
+            ),
+            # closed-form spans live in the node_span local closure
+            include_nested=True,
+        ),
+        # schedule constants (tile splits, shares) differ structurally:
+        # the DAG walk builds per-op tasks, the batch the closed form
+        check_consts=False,
+    ),
 )

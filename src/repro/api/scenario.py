@@ -69,7 +69,12 @@ class Scenario:
     # event-driven validation (repro.events): replay the top-K records
     # and stamp validated_step_time / fidelity_err (0 = off)
     validate_top: int = 0
-    schedule: str = "gpipe"        # pipeline schedule the replay uses
+    # pipeline schedule(s) the event engine uses: one schedule name, a
+    # comma list ("1f1b,interleaved"), or "search" (all schedules).
+    # More than one candidate turns on Study.run()'s event re-rank
+    # stage; the ONE source of truth for every event-engine consumer
+    # (validate_top stamping, the outer driver's event_replay hook).
+    schedule: str = "gpipe"
     backend: str = "numpy"
     seed: int = 0
     name: str = ""                 # study label (defaults to model)
@@ -126,13 +131,23 @@ class Scenario:
             raise ValueError("refine_top, keep_top and validate_top must "
                              "be >= 0")
         from repro.events.dag import SCHEDULES  # core-only dep, no cycle
-        if self.schedule not in SCHEDULES:
-            raise ValueError(f"unknown schedule {self.schedule!r}; "
-                             f"known: {list(SCHEDULES)}")
+        for sched in self.schedule_list():
+            if sched not in SCHEDULES:
+                raise ValueError(f"unknown schedule {sched!r}; known: "
+                                 f"{list(SCHEDULES)} or 'search'")
 
     # ------------------------------------------------------------------
     # Engine-object builders
     # ------------------------------------------------------------------
+    def schedule_list(self) -> Tuple[str, ...]:
+        """Candidate pipeline schedules: ``"search"`` expands to every
+        known schedule, a comma list to its entries, a plain name to a
+        1-tuple.  len > 1 means schedule is a search dimension."""
+        if self.schedule == "search":
+            from repro.events.dag import SCHEDULES
+            return tuple(SCHEDULES)
+        return tuple(s.strip() for s in self.schedule.split(","))
+
     def build_workload(self) -> Workload:
         from repro.configs import get_config
         return Workload(model=get_config(self.model), seq_len=self.seq_len,

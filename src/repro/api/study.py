@@ -110,10 +110,77 @@ def _batched_driver_kw(sc: Scenario, driver: str) -> dict:
     return kw
 
 
+_EVENT_KEYS = ("event_schedule", "event_v", "event_step_time",
+               "event_throughput")
+
+
+def _record_key(rec) -> tuple:
+    return (tuple(sorted(rec.strategy.items())),
+            tuple(sorted(rec.mcm.items())), rec.fabric)
+
+
+def _event_rerank_stage(sc: Scenario, sweep, kept: np.ndarray):
+    """The ``study.event_rerank`` stage: screen -> RE-RANK -> refine.
+
+    When the scenario makes the pipeline schedule a search dimension
+    (``schedule_list()`` > 1 candidate), the top-N analytic frontier is
+    compiled per ``(schedule, virtual_chunks)`` candidate through
+    ``events.compile_batch`` and batch-replayed; the head of ``kept``
+    comes back EVENT-best-first so both the kept records and the
+    refinement window honour the event-resolved ranking.  Returns
+    ``(kept, rerank_info)`` — ``rerank_info`` is None when the stage is
+    off (single schedule: bit-identical to the pre-stage path)."""
+    from repro.dse.search import event_rerank_rows
+    from repro.dse.space import schedule_axis
+    sched_list = sc.schedule_list()
+    if len(sched_list) < 2 or not len(kept):
+        return kept, None
+    n = int(min(len(kept), max(16, 4 * sc.refine_top)))
+    cands = schedule_axis(sched_list)
+    t0 = time.perf_counter()
+    with span("study.event_rerank", rows=n, candidates=len(cands)):
+        rr = event_rerank_rows(sweep, kept[:n], cands,
+                               backend=sc.backend)
+    kept = np.concatenate([kept[:n][rr["order"]], kept[n:]])
+    return kept, {"n": n, "cands": cands, "rr": rr,
+                  "elapsed_s": time.perf_counter() - t0,
+                  "schedules": sched_list}
+
+
+def _stamp_rerank(records, rerank: dict) -> dict:
+    """Stamp the winning ``(schedule, v)`` + event step time on the
+    re-ranked head of ``records`` (already event-best-first) and return
+    the ``provenance["event_rerank"]`` block."""
+    rr, n = rerank["rr"], rerank["n"]
+    order = rr["order"]
+    winners: dict = {}
+    for j in range(n):
+        pos = int(order[j])
+        rec = records[j]
+        step_ev = float(rr["step_time"][pos])
+        if not np.isfinite(step_ev):
+            continue               # no candidate compiled feasibly
+        sched = str(rr["schedule"][pos])
+        v = int(rr["v"][pos])
+        rec.metrics["event_schedule"] = sched
+        rec.metrics["event_v"] = v
+        rec.metrics["event_step_time"] = step_ev
+        rec.metrics["event_throughput"] = (
+            rec.metrics["throughput"] * rec.metrics["step_time"]
+            / step_ev) if step_ev > 0 else 0.0
+        key = f"{sched}/v{v}"
+        winners[key] = winners.get(key, 0) + 1
+    return {"n_reranked": n,
+            "schedules": list(rerank["schedules"]),
+            "candidates": [[s, int(v)] for s, v in rerank["cands"]],
+            "winners": winners}
+
+
 def _run_batched(sc: Scenario, driver: str,
                  alloc_mode: str = "chiplight",
                  engine: Optional[str] = None) -> StudyResult:
-    from repro.dse.search import refine_top_points, sweep_design_space
+    from repro.dse.search import (refine_sweep_rows, refine_top_points,
+                                  sweep_design_space)
     t0 = time.perf_counter()
     space = sc.design_space(alloc_mode=alloc_mode)
     kw = _batched_driver_kw(sc, driver) if alloc_mode == "chiplight" \
@@ -122,25 +189,49 @@ def _run_batched(sc: Scenario, driver: str,
         sweep = sweep_design_space(space, driver=driver,
                                    backend=sc.backend, seed=sc.seed, **kw)
     kept = _sweep_keep_indices(sweep, sc)
+    # the event engine replicates the chiplight link allocation — the
+    # railx sweep's analytic rows answer a different alloc, so the
+    # schedule re-rank only runs on the chiplight path
+    rerank = None
+    if alloc_mode == "chiplight":
+        kept, rerank = _event_rerank_stage(sc, sweep, kept)
     records = records_from_sweep(sweep, kept)
+    rerank_prov = _stamp_rerank(records, rerank) if rerank else None
     t1 = time.perf_counter()
     points = []
     if sc.refine_top and len(kept):
         with span("study.refine", top=sc.refine_top):
-            points = refine_top_points(sweep, top_k=sc.refine_top)
-    records += [record_from_point(p) for p in points]
+            if rerank is not None:
+                # kept is event-best-first: refine the event winners in
+                # that order (refine_sweep_rows preserves it)
+                points = refine_sweep_rows(sweep, kept[: sc.refine_top])
+            else:
+                points = refine_top_points(sweep, top_k=sc.refine_top)
+    refined = [record_from_point(p) for p in points]
+    if rerank_prov and refined:
+        # carry the winning (schedule, v) onto the refined duplicates
+        ev_by_key = {_record_key(r): {k: r.metrics[k]
+                                      for k in _EVENT_KEYS
+                                      if k in r.metrics}
+                     for r in records}
+        for r in refined:
+            r.metrics.update(ev_by_key.get(_record_key(r), {}))
+    records += refined
     t2 = time.perf_counter()
 
     best: Optional[int] = None
     if points:                       # refined best-first (exact costs)
         best = len(records) - len(points)
     elif records:
-        best = 0                     # kept rows are throughput-sorted
+        best = 0                     # kept rows are best-first
+    timings = {"sweep_s": sweep.elapsed_s,
+               "refine_s": t2 - t1, "total_s": t2 - t0}
+    if rerank is not None:
+        timings["rerank_s"] = rerank["elapsed_s"]
     result = StudyResult(
         scenario=sc, records=records, best=best, points=points,
         traces=[],
-        timings={"sweep_s": sweep.elapsed_s,
-                 "refine_s": t2 - t1, "total_s": t2 - t0},
+        timings=timings,
         provenance=_provenance(sc,
                                engine=engine
                                or f"dse.sweep[{driver}]+refine",
@@ -150,6 +241,8 @@ def _run_batched(sc: Scenario, driver: str,
                                n_feasible=int(sweep.metrics["feasible"]
                                               .sum()),
                                n_kept=len(kept), n_refined=len(points)))
+    if rerank_prov is not None:
+        result.provenance["event_rerank"] = rerank_prov
     result.pareto = result.pareto_indices()
     return result
 
@@ -212,7 +305,16 @@ def _run_outer(sc: Scenario) -> StudyResult:
     inner_method = kw.pop("inner_method", "batched")
     refine_per_variant = kw.pop("refine_per_variant", 8)
     event_replay = kw.pop("event_replay", 0)
-    event_schedule = kw.pop("event_schedule", "1f1b")
+    event_schedule = kw.pop("event_schedule", None)
+    if event_schedule is not None:
+        import warnings
+        warnings.warn(
+            "driver_kw 'event_schedule' is deprecated; set "
+            "Scenario.schedule (one name, a comma list, or 'search') — "
+            "the one source of truth for every event-engine consumer",
+            DeprecationWarning, stacklevel=3)
+    else:
+        event_schedule = sc.schedule_list()
     if kw:
         raise ValueError(
             f"driver 'chiplight-outer' does not accept driver_kw "
@@ -295,7 +397,8 @@ def _metrics_block(result: StudyResult, ms: "metrics.Metrics",
     hits = int(prov.get("n_cache_hits", 0))
     requests = int(prov.get("n_requested", n_sim + hits))
     wall = {"total": wall_s}
-    for key, label in (("sweep_s", "sweep"), ("refine_s", "refine"),
+    for key, label in (("sweep_s", "sweep"), ("rerank_s", "rerank"),
+                       ("refine_s", "refine"),
                        ("validate_s", "validate"),
                        ("total_s", "driver")):
         if key in result.timings:

@@ -117,8 +117,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="event-replay validation of the top N records "
                          "(stamps validated_step_time/fidelity_err)")
     ap.add_argument("--schedule", default=None,
-                    choices=("gpipe", "1f1b", "interleaved"),
-                    help="pipeline schedule the event replay uses")
+                    choices=("gpipe", "1f1b", "interleaved", "search"),
+                    help="pipeline schedule(s) the event engine uses; "
+                         "'search' makes the schedule a search "
+                         "dimension (event re-rank of the frontier)")
     ap.add_argument("--top", type=int, default=5,
                     help="best points to print")
     ap.add_argument("--seed", type=int, default=None)
@@ -237,6 +239,13 @@ def _print_study(res: StudyResult, top: int):
                   f"(exact topo/OCS cost)")
     print(f"  pareto set ({'/'.join(sc.objectives)}): "
           f"{len(res.pareto)} non-dominated records")
+    rr = res.provenance.get("event_rerank")
+    if rr:
+        wins = ", ".join(f"{k}:{v}" for k, v in
+                         sorted(rr["winners"].items()))
+        print(f"  event re-rank: {rr['n_reranked']} rows x "
+              f"{len(rr['candidates'])} schedule candidates "
+              f"(winners {wins})")
     val = res.provenance.get("validate")
     if val:
         err = val.get("max_abs_err")

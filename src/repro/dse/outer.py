@@ -90,7 +90,7 @@ def outer_search(w: Workload, total_tflops: float,
                  refine_per_variant: int = 8,
                  backend: str = "numpy",
                  event_replay: int = 0,
-                 event_schedule: str = "1f1b") -> DSEResult:
+                 event_schedule=("1f1b",)) -> DSEResult:
     """Outer MCM-architecture search at constant cluster compute C.
 
     ``method="population"`` (default) runs ``walkers`` walkers for
@@ -105,15 +105,20 @@ def outer_search(w: Workload, total_tflops: float,
 
     ``event_replay=K`` (population only) turns on the fused per-round
     event replay: each newly evaluated variant's top-K refined winners
-    are compiled under ``event_schedule`` and replayed in ONE batched
-    wavefront call (``backend`` picks its implementation); walkers then
-    adopt by event-resolved throughput.
+    are vector-compiled (``events.compile_batch`` — no per-record DAG
+    walks) and batch-replayed under EVERY ``event_schedule`` candidate
+    (a name or a sequence of names; interleaved expands over its
+    ``virtual_chunks`` grid), each point scored by its best schedule;
+    walkers then adopt by event-resolved throughput — the schedule is a
+    search dimension of the outer loop, not a fixed input.
     """
+    event_schedule = (event_schedule,) if isinstance(event_schedule, str) \
+        else tuple(event_schedule)
     if event_replay:
         from repro.events.dag import SCHEDULES
-        if event_schedule not in SCHEDULES:
-            raise ValueError(f"unknown event_schedule "
-                             f"{event_schedule!r}; known: "
+        bad = [s for s in event_schedule if s not in SCHEDULES]
+        if bad:
+            raise ValueError(f"unknown event_schedule {bad}; known: "
                              f"{list(SCHEDULES)}")
         if method == "scalar":
             raise ValueError("event_replay requires method='population' "
@@ -186,7 +191,8 @@ class _OuterPopulation:
                  inner_budget: int, walkers: int, fabric: str,
                  reuse: bool, hw: HW, seed: int, cpo0: float,
                  refine_per_variant: int, backend: str,
-                 event_replay: int = 0, event_schedule: str = "1f1b"):
+                 event_replay: int = 0,
+                 event_schedule: Tuple[str, ...] = ("1f1b",)):
         self.w = w
         self.total_tflops = total_tflops
         self.dies_per_mcm = dies_per_mcm
@@ -381,34 +387,59 @@ class _OuterPopulation:
             self.cache[mcm_variant_key(m)].grid_size for m in mcms)
 
     def _event_replay(self, evs: List[VariantEval]) -> None:
-        """Fused per-round event replay: compile the round's candidate
-        winners (top ``event_replay`` refined points per new variant)
-        into ``StepProgram``s and replay them in ONE vectorized
-        wavefront call, then stamp each point's logs with the
-        event-resolved step time and each variant with its best
+        """Fused per-round event replay with schedule search: the
+        round's candidate winners (top ``event_replay`` refined points
+        per new variant) are vector-compiled by
+        ``events.compile_batch`` and batch-replayed once per
+        ``(schedule, virtual_chunks)`` candidate; each point is scored
+        by its BEST schedule, its logs stamped with the event-resolved
+        step time and winning schedule, and each variant with its best
         event-corrected throughput."""
-        from repro.events.batch import replay_batch
-        from repro.events.dag import compile_step
-        progs, owners = [], []
+        from repro.dse.space import schedule_axis
+        from repro.events.compile_batch import compile_batch
+        from repro.events.dag import SCHEDULES
+        pts, owners = [], []
         for ev in evs:
             for p in ev.points[: self.event_replay]:
-                try:
-                    progs.append(compile_step(
-                        self.w, p.strategy, p.mcm, fabric=p.fabric,
-                        topo=p.topo, reuse=self.reuse, hw=self.hw,
-                        schedule=self.event_schedule))
-                except ValueError:
-                    continue      # infeasible under the scalar oracle
-                owners.append((ev, p))
-        if not progs:
+                pts.append(p)
+                owners.append(ev)
+        if not pts:
             return
-        res = replay_batch(progs, backend=self.backend)
-        obs_metrics.inc("outer.event_replayed", len(progs))
-        self.n_event_replayed += len(progs)
-        for j, (ev, p) in enumerate(owners):
-            st = float(res["step_time"][j])
+        cands = schedule_axis(self.event_schedule)
+        N = len(pts)
+        steps = np.full((len(cands), N), np.inf)
+        errs = np.full((len(cands), N), np.nan)
+        vs = np.ones((len(cands), N), np.int64)
+        feas_any = np.zeros(N, bool)
+        for ci, (sched, v) in enumerate(cands):
+            cb = compile_batch(
+                self.w, [p.strategy for p in pts],
+                [p.mcm for p in pts],
+                fabric=[p.fabric for p in pts],
+                topos=[p.topo for p in pts], reuse=self.reuse,
+                hw=self.hw, schedule=sched, virtual_chunks=v)
+            res = cb.replay(backend=self.backend)
+            steps[ci] = res["step_time"]
+            errs[ci] = res["err"]
+            vs[ci] = cb.v
+            feas_any |= cb.feasible
+        n_ok = int(feas_any.sum())
+        if not n_ok:
+            return                # no point compiled under any schedule
+        obs_metrics.inc("outer.event_replayed", n_ok)
+        self.n_event_replayed += n_ok
+        win = np.argmin(steps, axis=0)
+        for j, (ev, p) in enumerate(zip(owners, pts)):
+            if not feas_any[j]:
+                continue
+            ci = int(win[j])
+            st = float(steps[ci, j])
             p.sim.logs["event_step_time"] = st
-            p.sim.logs["event_err"] = float(res["err"][j])
+            p.sim.logs["event_err"] = float(errs[ci, j])
+            # logs are float-valued: the schedule rides as its index
+            p.sim.logs["event_schedule"] = float(
+                SCHEDULES.index(cands[ci][0]))
+            p.sim.logs["event_v"] = float(vs[ci, j])
             thpt = (p.throughput * p.sim.step_time / st) if st > 0 else 0.0
             if thpt > ev.event_thpt:
                 ev.event_thpt = thpt

@@ -798,6 +798,56 @@ def _refine_railx(sweep: SweepResult, order: np.ndarray) -> List:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Event-replay re-rank: schedule as a search dimension
+# ---------------------------------------------------------------------------
+def event_rerank_rows(sweep: SweepResult, rows,
+                      candidates: Sequence[Tuple[str, int]],
+                      backend: str = "auto") -> Dict[str, np.ndarray]:
+    """Re-rank the given sweep rows by event-replay step time.
+
+    Compiles the rows ONCE per ``(schedule, virtual_chunks)`` candidate
+    through ``events.compile_batch`` (vectorized — no per-record DAG
+    walks) and replays them all; each row's winner is the candidate with
+    the smallest event step time.  Returns per-row arrays —
+    ``step_time`` (inf where no candidate is feasible), ``schedule``,
+    ``v`` (the per-row CLAMPED interleave depth of the winner),
+    ``candidate`` (index into ``candidates``) — plus ``order``: row
+    POSITIONS (indices into ``rows``) sorted best-first by event step
+    time, which is what ``Study.run``'s ``study.event_rerank`` stage
+    feeds to ``refine_sweep_rows``."""
+    from repro.events import compile_batch       # lazy: no cycle
+    rows = np.asarray(rows, np.int64)
+    N = len(rows)
+    cands = tuple(candidates)
+    if not cands:
+        raise ValueError("event_rerank_rows needs at least one "
+                         "(schedule, virtual_chunks) candidate")
+    sub = sweep.batch.take(rows)
+    midx = np.asarray(sweep.mcm_idx)[rows]
+    mcms = [sweep.space.mcms[int(i)] for i in midx]
+    fabs = [str(f) for f in np.asarray(sweep.fabric)[rows]]
+    w = sweep.space.workload
+    steps = np.full((len(cands), N), np.inf)
+    vs = np.ones((len(cands), N), np.int64)
+    for ci, (sched, v) in enumerate(cands):
+        cb = compile_batch(w, sub, mcms, fabric=fabs,
+                           reuse=sweep.space.reuse, schedule=sched,
+                           virtual_chunks=v)
+        steps[ci] = cb.replay(backend=backend)["step_time"]
+        vs[ci] = cb.v
+    win = np.argmin(steps, axis=0)
+    pos = np.arange(N)
+    step = steps[win, pos]
+    return {
+        "step_time": step,
+        "candidate": win,
+        "schedule": np.array([cands[int(c)][0] for c in win]),
+        "v": vs[win, pos],
+        "order": np.argsort(step, kind="stable"),
+    }
+
+
 _SIM_COLS = ("feasible", "step_time", "throughput", "mfu", "t_comp",
              "t_mem", "t_coll", "exposed", "dp_exposed", "bubble",
              "reuse_active")

@@ -30,6 +30,21 @@ P_IDX = {p: i for i, p in enumerate(P_ORDER)}
 
 FABRICS = ("oi", "ib", "nvlink")
 
+# Pipeline-schedule search axis: interleave depths tried per schedule
+# when the schedule is a search dimension (the event re-rank stage and
+# the outer search's per-round replay).  Depths are requests — the
+# compiler clamps per row to min(layers_per_stage, n_micro), and
+# duplicate clamped candidates cost one extra vectorized pass, not a
+# per-record walk.
+SCHEDULE_V = {"gpipe": (1,), "1f1b": (1,), "interleaved": (2, 4)}
+
+
+def schedule_axis(schedules: Sequence[str]
+                  ) -> Tuple[Tuple[str, int], ...]:
+    """Expand schedule names to (schedule, virtual_chunks) candidates."""
+    return tuple((s, v) for s in schedules
+                 for v in SCHEDULE_V.get(s, (1,)))
+
 
 # ---------------------------------------------------------------------------
 # Strategy batches (SoA)

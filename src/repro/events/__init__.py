@@ -13,7 +13,9 @@ package without a cycle.
 from repro.events.dag import (SCHEDULES, StepProgram, TaskSpec,  # noqa: F401
                               compile_step, device_op_order)
 from repro.events.engine import EventResult, replay  # noqa: F401
-from repro.events.batch import replay_batch  # noqa: F401
+from repro.events.batch import replay_batch, replay_rows  # noqa: F401
+from repro.events.compile_batch import (CompiledBatch,  # noqa: F401
+                                        compile_batch)
 
 _LAZY = ("validate_scenario", "validate_zoo", "stamp_validation",
          "fidelity_table", "FIDELITY_SCHEMA", "DEFAULT_TOLERANCE")
@@ -28,4 +30,4 @@ def __getattr__(name):
 
 __all__ = ["SCHEDULES", "StepProgram", "TaskSpec", "compile_step",
            "device_op_order", "EventResult", "replay", "replay_batch",
-           *_LAZY]
+           "replay_rows", "CompiledBatch", "compile_batch", *_LAZY]

@@ -35,7 +35,12 @@ stability).
 
 Two backends for the recurrence (``backend=`` numpy|jax|auto).
 ``numpy`` loops the L levels in Python with (K, S) array ops per level
-over the gathered per-record tables.  ``jax`` goes one step further
+over the gathered per-record tables; records are processed in K-chunks
+sized to ``NUMPY_CHUNK_BUDGET_BYTES`` of scratch — deep-pipeline shapes
+(e.g. pp=16, v=2, nm=64) otherwise grow the per-record history past
+the last-level cache and large K replays SLOWER than small K (the
+one-time BENCH_events.json qwen3 anomaly: 3.6k rec/s at K=1024 vs
+4.4k at K=64; chunked, rates are monotone in K).  ``jax`` goes further
 than ``batched_sim``'s vmap-a-traced-function discipline: because the
 tables are compile-time constants per shape key, ``_jax_shape_fn``
 unrolls the whole recurrence AT TRACE TIME into a straight-line program
@@ -66,8 +71,16 @@ from repro.obs import metrics
 # below this many records the numpy level loop beats jax dispatch
 # overhead; used by backend="auto" (the crossover is far lower than
 # batched_sim's: one replay record is a whole schedule recurrence, not
-# one closed-form expression)
+# one closed-form expression).  The chunked numpy wavefront scales
+# monotonically in K, so the crossover is K-independent and 32 holds
+# across the bench shapes.
 JAX_AUTO_MIN_RECORDS = 32
+
+# per-chunk scratch budget for the numpy wavefront: float64 history +
+# three gathered int32 tables ~ 20 bytes per (record, stage, level)
+# cell.  Chunking K keeps the history resident in cache while the
+# level loop sweeps it (see module docstring).
+NUMPY_CHUNK_BUDGET_BYTES = 8 << 20
 
 # incremented once per jax trace of a shape-keyed wavefront — the same
 # contract as dse.batched_sim._JAX_TRACES (tests pin that a same-bucket
@@ -228,6 +241,28 @@ def _wavefront_numpy(ldir: np.ndarray, ldep_s: np.ndarray,
     return dev_end.max(axis=1)
 
 
+def _wavefront_numpy_chunked(shape_keys: Sequence[Tuple],
+                             key_rows: np.ndarray, tau_f: np.ndarray,
+                             tau_b: np.ndarray) -> np.ndarray:
+    """(K,) body makespans, gathering tables and running the level loop
+    in K-chunks bounded by ``NUMPY_CHUNK_BUDGET_BYTES`` of scratch."""
+    K = key_rows.shape[0]
+    tabs = [_shape_tables(*key) for key in shape_keys]
+    S = max(t[0].shape[0] for t in tabs)
+    L = max(t[0].shape[1] for t in tabs)
+    per_rec = 20 * S * L              # hist float64 + 3 int32 tables
+    kc = max(NUMPY_CHUNK_BUDGET_BYTES // max(per_rec, 1), 16)
+    if kc >= K:
+        return _wavefront_numpy(*_stack_tables(shape_keys, key_rows),
+                                tau_f, tau_b)
+    out = np.empty(K)
+    for lo in range(0, K, kc):
+        sl = slice(lo, min(lo + kc, K))
+        out[sl] = _wavefront_numpy(
+            *_stack_tables(shape_keys, key_rows[sl]), tau_f[sl], tau_b[sl])
+    return out
+
+
 # ---------------------------------------------------------------------------
 # The wave recurrence — jax, unrolled at trace time per shape key
 # ---------------------------------------------------------------------------
@@ -347,8 +382,51 @@ def _replay_jax(shape_keys: Sequence[Tuple], key_rows: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# replay_batch
+# replay_rows / replay_batch
 # ---------------------------------------------------------------------------
+def replay_rows(shape_keys: Sequence[Tuple], key_rows: np.ndarray,
+                rows: np.ndarray, backend: str = "auto"
+                ) -> Dict[str, np.ndarray]:
+    """Replay K pre-compiled record rows: ``rows`` is the (6, K)
+    ``_ROW_KEYS`` matrix, ``shape_keys`` the batch's unique
+    (schedule, pp, v, n_micro) keys and ``key_rows`` the per-record
+    index into it.  This is the shared wavefront entry: ``replay_batch``
+    extracts rows from ``StepProgram``s, ``events.compile_batch`` builds
+    them vectorized without any programs.  Returns the SoA result dict
+    (see ``replay_batch``)."""
+    K = rows.shape[1]
+    if K == 0:
+        out = {k: np.zeros(0) for k in
+               ("step_time", "makespan_body", "bubble", "dp_exposed",
+                "analytic_step_time", "err")}
+        out["scalar_fallback"] = np.zeros(0, bool)
+        return out
+    metrics.inc("batch_replay.records", K)
+    backend = resolve_backend(backend, K)
+
+    if backend == "jax":
+        res = _replay_jax(shape_keys, key_rows, rows)
+        out = dict(zip(_RES_KEYS, res))
+        out["analytic_step_time"] = rows[5]
+        out["scalar_fallback"] = np.zeros(K, bool)
+        return out
+
+    tau_f, tau_b, t_dp, credit, nmv, analytic = rows
+    body_end = _wavefront_numpy_chunked(shape_keys, key_rows, tau_f, tau_b)
+
+    busy = nmv * (tau_f + tau_b)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        bubble = np.where(busy > 0, body_end / busy - 1.0, 0.0)
+        dp_exposed = np.maximum(t_dp - credit, 0.0)
+        dp_exposed = np.where(t_dp > 0, dp_exposed, 0.0)
+        step_time = body_end + dp_exposed
+        err = (step_time - analytic) / analytic
+    return {"step_time": step_time, "makespan_body": body_end,
+            "bubble": bubble, "dp_exposed": dp_exposed,
+            "analytic_step_time": analytic, "err": err,
+            "scalar_fallback": np.zeros(K, bool)}
+
+
 def replay_batch(programs: Sequence[StepProgram],
                  backend: str = "auto") -> Dict[str, np.ndarray]:
     """Replay K programs; returns SoA arrays over the batch:
@@ -360,13 +438,8 @@ def replay_batch(programs: Sequence[StepProgram],
     (``numpy`` | ``jax`` | ``auto``, see module docstring)."""
     K = len(programs)
     if K == 0:
-        out = {k: np.zeros(0) for k in
-               ("step_time", "makespan_body", "bubble", "dp_exposed",
-                "analytic_step_time", "err")}
-        out["scalar_fallback"] = np.zeros(0, bool)
-        return out
-    metrics.inc("batch_replay.records", K)
-    backend = resolve_backend(backend, K)
+        return replay_rows((), np.zeros(0, np.int64), np.zeros((6, 0)),
+                           backend=backend)
 
     # Dedupe by object identity at C speed: bench batches and outer
     # rounds replay few unique programs many times, so all per-record
@@ -386,26 +459,4 @@ def replay_batch(programs: Sequence[StepProgram],
     shape_keys = list(key_of)
     key_rows = ukey_idx[inv]                            # (K,)
     rows = np.ascontiguousarray(urows[inv].T)           # (6, K)
-
-    if backend == "jax":
-        res = _replay_jax(shape_keys, key_rows, rows)
-        out = dict(zip(_RES_KEYS, res))
-        out["analytic_step_time"] = rows[5]
-        out["scalar_fallback"] = np.zeros(K, bool)
-        return out
-
-    tau_f, tau_b, t_dp, credit, nmv, analytic = rows
-    ldir, ldep_s, ldep_l = _stack_tables(shape_keys, key_rows)
-    body_end = _wavefront_numpy(ldir, ldep_s, ldep_l, tau_f, tau_b)
-
-    busy = nmv * (tau_f + tau_b)
-    with np.errstate(invalid="ignore", divide="ignore"):
-        bubble = np.where(busy > 0, body_end / busy - 1.0, 0.0)
-        dp_exposed = np.maximum(t_dp - credit, 0.0)
-        dp_exposed = np.where(t_dp > 0, dp_exposed, 0.0)
-        step_time = body_end + dp_exposed
-        err = (step_time - analytic) / analytic
-    return {"step_time": step_time, "makespan_body": body_end,
-            "bubble": bubble, "dp_exposed": dp_exposed,
-            "analytic_step_time": analytic, "err": err,
-            "scalar_fallback": np.zeros(K, bool)}
+    return replay_rows(shape_keys, key_rows, rows, backend=backend)

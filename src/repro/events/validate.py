@@ -29,7 +29,6 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.mcm import MCMArch
 from repro.core.network import OITopology, RailDim
 from repro.core.traffic import Strategy
-from repro.events.batch import replay_batch
 from repro.events.dag import SCHEDULES, compile_step
 from repro.events.engine import replay
 
@@ -53,8 +52,8 @@ def _rebuild_topo(topo: Optional[dict]) -> Optional[OITopology]:
         else None)
 
 
-def _rebuild(record, scenario) -> Tuple[Strategy, MCMArch,
-                                        Optional[OITopology], str]:
+def _rebuild(record, scenario, hw=None) -> Tuple[Strategy, MCMArch,
+                                                 Optional[OITopology], str]:
     st = record.strategy
     s = Strategy(tp=int(st["TP"]), dp=int(st["DP"]), pp=int(st["PP"]),
                  cp=int(st["CP"]), ep=int(st["EP"]),
@@ -62,7 +61,7 @@ def _rebuild(record, scenario) -> Tuple[Strategy, MCMArch,
     mc = record.mcm
     mcm = MCMArch(n_mcm=int(mc["n_mcm"]), x=int(mc["x"]), y=int(mc["y"]),
                   m=int(mc["m"]), cpo_ratio=float(mc["cpo_ratio"]),
-                  hw=scenario.build_hw())
+                  hw=hw if hw is not None else scenario.build_hw())
     return s, mcm, _rebuild_topo(record.topo), record.fabric
 
 
@@ -91,40 +90,76 @@ def _top_records(result, top: int) -> List[int]:
 # ---------------------------------------------------------------------------
 # Study integration (batch replay — off the critical path)
 # ---------------------------------------------------------------------------
+def _schedule_names(schedule: str) -> Tuple[str, ...]:
+    """Resolve a schedule spec — one name, a comma list, or ``search``
+    (every known schedule) — to a tuple of names."""
+    if schedule == "search":
+        return tuple(SCHEDULES)
+    return tuple(s.strip() for s in str(schedule).split(","))
+
+
 def stamp_validation(result, top: int, schedule: str = "gpipe",
                      backend: str = "auto") -> dict:
     """Replay the top-``top`` records of ``result`` and stamp each with
     ``validated_step_time`` / ``fidelity_err``; returns (and attaches to
-    ``result.provenance['validate']``) a summary block.  ``backend``
-    picks the wavefront implementation (``numpy`` | ``jax`` | ``auto``,
-    see ``repro.events.batch``)."""
+    ``result.provenance['validate']``) a summary block.
+
+    Records are vector-compiled by ``events.compile_batch`` (no
+    per-record DAG walks) and replayed in one batched wavefront call per
+    resolved ``(schedule, v)`` group.  ``schedule`` may be one name, a
+    comma list or ``"search"``: with more than one candidate each record
+    validates under its OWN re-rank winner (the ``event_schedule`` /
+    ``event_v`` metrics stamped by ``Study.run``'s event re-rank stage),
+    falling back to the first candidate.  ``backend`` picks the
+    wavefront implementation (``numpy`` | ``jax`` | ``auto``, see
+    ``repro.events.batch``)."""
+    from repro.events.compile_batch import compile_batch
     t0 = time.perf_counter()
     sc = result.scenario
     idx = _top_records(result, top)
-    programs, rows = [], []
+    scheds = _schedule_names(schedule)
+    w = sc.build_workload()
+    hw = sc.build_hw()
+    # group records by their resolved (schedule, virtual_chunks): one
+    # compile_batch + replay per group (usually exactly one group)
+    groups: Dict[Tuple[str, Optional[int]], List[tuple]] = {}
     for i in idx:
         r = result.records[i]
         try:
-            s, mcm, topo, fabric = _rebuild(r, sc)
-            programs.append(compile_step(
-                sc.build_workload(), s, mcm, fabric=fabric, topo=topo,
-                reuse=sc.reuse, hw=sc.build_hw(), schedule=schedule))
-            rows.append(i)
-        except ValueError:
-            continue                  # infeasible under the scalar oracle
-    res = replay_batch(programs, backend=backend)
-    errs = []
-    for j, i in enumerate(rows):
-        rec = result.records[i]
-        rec.metrics["validated_step_time"] = float(res["step_time"][j])
-        rec.metrics["fidelity_err"] = float(res["err"][j])
-        errs.append(abs(float(res["err"][j])))
-    n_fb = int(res["scalar_fallback"].sum())
-    summary = {"n_validated": len(rows), "schedule": schedule,
+            s, mcm, topo, fabric = _rebuild(r, sc, hw=hw)
+        except (KeyError, TypeError, ValueError):
+            continue
+        rsched = str(r.metrics.get("event_schedule", scheds[0]))
+        if rsched not in SCHEDULES:
+            rsched = scheds[0]
+        rv = r.metrics.get("event_v")
+        key = (rsched, int(rv) if rv is not None else None)
+        groups.setdefault(key, []).append((i, s, mcm, topo, fabric))
+    errs: List[float] = []
+    n_validated, n_fb = 0, 0
+    for (sched, rv), members in groups.items():
+        cb = compile_batch(w, [m[1] for m in members],
+                           [m[2] for m in members],
+                           fabric=[m[4] for m in members],
+                           topos=[m[3] for m in members],
+                           reuse=sc.reuse, hw=hw, schedule=sched,
+                           virtual_chunks=rv)
+        res = cb.replay(backend=backend)
+        n_fb += int(res["scalar_fallback"].sum())
+        for j, m in enumerate(members):
+            if not cb.feasible[j]:
+                continue              # infeasible under the oracle
+            rec = result.records[m[0]]
+            rec.metrics["validated_step_time"] = float(res["step_time"][j])
+            rec.metrics["fidelity_err"] = float(res["err"][j])
+            errs.append(abs(float(res["err"][j])))
+            n_validated += 1
+    summary = {"n_validated": n_validated, "schedule": schedule,
                "method": "batch", "backend": backend,
                "max_abs_err": max(errs) if errs else None,
                "n_scalar_fallback": n_fb,
-               "scalar_fallback_frac": n_fb / len(rows) if rows else 0.0,
+               "scalar_fallback_frac": n_fb / n_validated
+               if n_validated else 0.0,
                "elapsed_s": time.perf_counter() - t0}
     result.provenance["validate"] = summary
     result.timings["validate_s"] = summary["elapsed_s"]

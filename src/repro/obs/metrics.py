@@ -47,6 +47,7 @@ KNOWN_COUNTERS = frozenset({
     "batched_sim.jax_calls",
     "batched_sim.jax_pad_rows",
     "batched_sim.jax_retraces",
+    "compile_batch.records",
     "dse.cache.fallback_rows",
     "dse.cache.hits",
     "dse.cache.sim",

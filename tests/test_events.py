@@ -423,3 +423,180 @@ def test_cli_validate_top_flag(capsys):
                "--quick", "--out", "artifacts/studies"])
     assert rc == 0
     assert "event-validated 2 records" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: vectorized record->program compilation (events.compile_batch)
+# ---------------------------------------------------------------------------
+def _program_row(p):
+    """The (6,) _ROW_KEYS row the per-record path derives from one
+    compiled StepProgram — the reference compile_batch is pinned to."""
+    return np.array(p.spans() + (p.n_micro * p.v,
+                                 p.analytic.step_time))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([c[0] for c in _CASES]),
+       st.sampled_from(SCHEDULES), st.integers(0, 10 ** 6))
+def test_compile_batch_parity(name, sched, pick):
+    """Batched compilation == K compile_step walks at 1e-9: spans,
+    DP cost, overlap credit, nmv and the embedded analytic step."""
+    from repro.events.compile_batch import compile_batch
+    _, w, mcm = next(c for c in _CASES if c[0] == name)
+    grid = _feasible(name, w, mcm)
+    ss = [grid[(pick + i) % len(grid)][0] for i in range(5)]
+    cb = compile_batch(w, ss, mcm, schedule=sched)
+    assert cb.feasible.all()
+    for j, s in enumerate(ss):
+        p = compile_step(w, s, mcm, schedule=sched)
+        np.testing.assert_allclose(cb.rows[:, j], _program_row(p),
+                                   rtol=1e-9, err_msg=f"{sched} {s}")
+        assert int(cb.v[j]) == p.v
+        assert cb.shape_keys[cb.key_rows[j]] == \
+            (sched, p.n_stages, p.v, p.n_micro)
+
+
+def test_compile_batch_topo_rows_parity():
+    """Per-row derived OITopology overrides the allocation exactly like
+    compile_step's topo branch (mixed with derive-it-yourself rows)."""
+    from repro.core.optimizer import evaluate_point
+    from repro.events.compile_batch import compile_batch
+    rows = []
+    for s, _ in _feasible("moe", MOE, MCM_MOE)[:20]:
+        pt = evaluate_point(MOE, s, MCM_MOE)
+        if pt is None or pt.topo is None or not pt.topo.dims:
+            continue
+        rows.append((s, pt.topo))
+        if len(rows) >= 3:
+            break
+    assert rows
+    rows.append((_feasible("moe", MOE, MCM_MOE)[0][0], None))
+    ss = [s for s, _ in rows]
+    topos = [t for _, t in rows]
+    cb = compile_batch(MOE, ss, MCM_MOE, topos=topos, schedule="1f1b")
+    assert cb.feasible.all()
+    for j, (s, topo) in enumerate(rows):
+        p = compile_step(MOE, s, MCM_MOE, topo=topo, schedule="1f1b")
+        np.testing.assert_allclose(cb.rows[:, j], _program_row(p),
+                                   rtol=1e-9)
+
+
+def test_compile_batch_marks_infeasible():
+    """compile_step raises on an infeasible point; the batch marks the
+    row and replay() scatters inf back instead."""
+    from repro.events.compile_batch import compile_batch
+    good = _feasible("tiny", TINY, MCM_TINY)[0][0]
+    bad = Strategy(tp=3, dp=1, pp=1, cp=1, ep=1, n_micro=1)
+    cb = compile_batch(TINY, [good, bad], MCM_TINY)
+    assert cb.feasible.tolist() == [True, False]
+    assert np.isnan(cb.rows[:, 1]).all()
+    assert cb.key_rows[1] == -1
+    out = cb.replay(backend="numpy")
+    assert np.isfinite(out["step_time"][0])
+    assert out["step_time"][1] == np.inf
+    with pytest.raises(ValueError, match="schedule"):
+        compile_batch(TINY, [good], MCM_TINY, schedule="zigzag")
+
+
+@pytest.mark.parametrize("case", _CASES, ids=[c[0] for c in _CASES])
+def test_compile_batch_ranking_matches_per_record(case):
+    """Fixed-schedule event ranking through the fused path == the
+    per-record compile_step + replay_batch ranking."""
+    from repro.events.compile_batch import compile_batch
+    name, w, mcm = case
+    grid = _feasible(name, w, mcm)
+    ss = [t[0] for t in grid[:8]]
+    ss += [t[0] for t in grid if t[0].pp > 1][:4]
+    cb = compile_batch(w, ss, mcm, schedule="1f1b")
+    got = cb.replay(backend="numpy")["step_time"]
+    progs = [compile_step(w, s, mcm, schedule="1f1b") for s in ss]
+    want = replay_batch(progs, backend="numpy")["step_time"]
+    np.testing.assert_allclose(got, want, rtol=1e-9)
+    assert np.array_equal(np.argsort(got, kind="stable"),
+                          np.argsort(want, kind="stable"))
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: schedule search — scenario axis, study re-rank, outer hook
+# ---------------------------------------------------------------------------
+def test_scenario_schedule_list():
+    assert _tiny_scenario().schedule_list() == ("gpipe",)
+    assert _tiny_scenario(schedule="search").schedule_list() == \
+        tuple(SCHEDULES)
+    assert _tiny_scenario(schedule="1f1b,interleaved").schedule_list() \
+        == ("1f1b", "interleaved")
+    with pytest.raises(ValueError, match="schedule"):
+        _tiny_scenario(schedule="1f1b,zigzag")
+
+
+def test_schedule_axis():
+    from repro.dse.space import schedule_axis
+    assert schedule_axis(("gpipe",)) == (("gpipe", 1),)
+    assert schedule_axis(("1f1b", "interleaved")) == \
+        (("1f1b", 1), ("interleaved", 2), ("interleaved", 4))
+
+
+def test_event_rerank_rows_fixed_schedule_matches_replay_ranking():
+    from repro.dse.search import event_rerank_rows, sweep_design_space
+    sc = _tiny_scenario()
+    sweep = sweep_design_space(sc.design_space(), backend=sc.backend)
+    feas = np.nonzero(sweep.metrics["feasible"])[0]
+    rows = feas[np.argsort(-sweep.metrics["throughput"][feas])][:12]
+    rr = event_rerank_rows(sweep, rows, [("1f1b", 1)], backend="numpy")
+    progs = []
+    for i in rows:
+        s = sweep.batch.take(np.array([int(i)])).to_strategies()[0]
+        mcm = sweep.space.mcms[int(sweep.mcm_idx[i])]
+        progs.append(compile_step(sweep.space.workload, s, mcm,
+                                  fabric=str(sweep.fabric[i]),
+                                  reuse=sweep.space.reuse,
+                                  schedule="1f1b"))
+    want = replay_batch(progs, backend="numpy")["step_time"]
+    np.testing.assert_allclose(rr["step_time"], want, rtol=1e-9)
+    assert np.array_equal(rr["order"], np.argsort(want, kind="stable"))
+    assert set(rr["schedule"]) == {"1f1b"} and (rr["v"] == 1).all()
+
+
+def test_study_schedule_search_reranks_and_stamps():
+    from repro.api import Study
+    res = Study(_tiny_scenario(schedule="search")).run()
+    rr = res.provenance["event_rerank"]
+    assert rr["n_reranked"] > 0
+    assert rr["schedules"] == list(SCHEDULES)
+    assert sum(rr["winners"].values()) == rr["n_reranked"]
+    assert res.timings["rerank_s"] > 0
+    best = res.records[res.best]
+    assert best.metrics["event_schedule"] in SCHEDULES
+    assert best.metrics["event_v"] >= 1
+    assert best.metrics["event_step_time"] > 0
+    assert best.metrics["event_throughput"] > 0
+    # a single-schedule scenario skips the stage entirely
+    r1 = Study(_tiny_scenario(schedule="1f1b")).run()
+    assert "event_rerank" not in r1.provenance
+    assert "rerank_s" not in r1.timings
+
+
+def test_outer_event_replay_schedule_search():
+    from repro.api import Study
+    sc = _tiny_scenario(schedule="search", driver="chiplight-outer",
+                        driver_kw={"rounds": 1, "walkers": 2,
+                                   "event_replay": 2})
+    res = Study(sc).run()
+    assert res.provenance["n_event_replayed"] > 0
+    w = res.traces[-1]["walkers"][0]
+    assert w["event_thpt"] > 0 and w["event_step_time"] > 0
+
+
+def test_outer_event_schedule_driver_kw_deprecated():
+    import warnings
+    from repro.api import Study
+    sc = _tiny_scenario(driver="chiplight-outer",
+                        driver_kw={"rounds": 1, "walkers": 2,
+                                   "event_replay": 2,
+                                   "event_schedule": "1f1b"})
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        res = Study(sc).run()
+    assert sum(issubclass(r.category, DeprecationWarning)
+               for r in rec) == 1
+    assert res.provenance["n_event_replayed"] > 0
