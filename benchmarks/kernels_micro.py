@@ -1,27 +1,41 @@
 """Kernel microbenchmarks: interpret-mode correctness timing + the
 xla-blockwise path wall-time per call on CPU (not TPU numbers — the
-kernels' TPU performance is assessed structurally via the roofline)."""
+kernels' TPU performance is assessed structurally via the roofline,
+and the fitted efficiency curves via ``python -m repro.cli calibrate``).
+
+    PYTHONPATH=src:. python benchmarks/kernels_micro.py
+    PYTHONPATH=src:. python benchmarks/kernels_micro.py --quick
+
+``--quick`` gates the three headline kernels against the floors owned
+by ``repro.obs.bench`` (the CI smoke mode — also reachable as
+``python -m repro.cli bench check --which kernels --quick``).  Timing
+goes through ``repro.obs.bench.time_fn`` (best-of-reps after warmup),
+the same helper the calibration profiler uses.
+"""
 from __future__ import annotations
 
-import time
+import argparse
+import json
+import sys
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.kernels import ops
+from repro.obs.bench import (DEFAULT_FLOORS, enforce,
+                             measure_kernels_quick, time_fn)
+
+REPO = Path(__file__).resolve().parents[1]
+OUT = REPO / "BENCH_kernels.json"
 
 
-def _time(fn, *args, reps=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
-    t0 = time.time()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps * 1e6
+def _us(fn, *args, reps: int = 3) -> float:
+    return time_fn(fn, *args, reps=reps) * 1e6
 
 
-def run():
+def bench_all() -> list:
     rows = []
     key = jax.random.PRNGKey(0)
     for s, blk in ((512, 128), (1024, 256)):
@@ -32,8 +46,8 @@ def run():
             q, k, v, block=blk, backend="xla"))
         f_blk = jax.jit(lambda q, k, v: ops.flash_attention(
             q, k, v, block=blk, backend="xla_blocked"))
-        us1 = _time(f_scan, q, k, v)
-        us2 = _time(f_blk, q, k, v)
+        us1 = _us(f_scan, q, k, v)
+        us2 = _us(f_blk, q, k, v)
         rows.append([f"flash_attn_s{s}", f"{us1:.0f}",
                      f"blocked={us2:.0f}us speedup={us1 / us2:.2f}x"])
 
@@ -44,15 +58,43 @@ def run():
     bm = jax.random.normal(key, (bb, s, g, n)) * 0.3
     cm = jax.random.normal(key, (bb, s, g, n)) * 0.3
     f_ssd = jax.jit(lambda *t: ops.ssd(*t, chunk=128, backend="xla"))
-    rows.append(["ssd_s512", f"{_time(f_ssd, x, dt, a, bm, cm):.0f}", ""])
+    rows.append(["ssd_s512", f"{_us(f_ssd, x, dt, a, bm, cm):.0f}", ""])
 
     xx = jax.random.normal(key, (4096, 1024))
     w = jnp.ones((1024,))
     f_rn = jax.jit(lambda x_: ops.rmsnorm(x_, w))
-    rows.append(["rmsnorm_4096x1024", f"{_time(f_rn, xx):.0f}", ""])
+    rows.append(["rmsnorm_4096x1024", f"{_us(f_rn, xx):.0f}", ""])
     emit("kernels_micro", rows, ["name", "us_per_call", "derived"])
     return rows
 
 
+def run(quick: bool = False) -> int:
+    if quick:
+        # same measurement + floors as `cli bench check --which kernels`
+        got = enforce("kernels", measure_kernels_quick(), root=REPO)
+        return int(any(not row["ok"] for row in got))
+        # quick mode never rewrites JSON
+
+    rows = bench_all()
+    payload = {"bench": "kernels_micro",
+               "results": [dict(zip(("name", "us_per_call", "derived"),
+                                    r)) for r in rows],
+               "quick": measure_kernels_quick(),
+               "quick_floors": dict(DEFAULT_FLOORS["kernels"])}
+    OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {OUT}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="three headline kernels vs regression floors "
+                         "(CI smoke); does not rewrite "
+                         "BENCH_kernels.json")
+    args = ap.parse_args(argv)
+    return run(quick=args.quick)
+
+
 if __name__ == "__main__":
-    run()
+    sys.exit(main())

@@ -5,18 +5,61 @@ Per (arch x shape x mesh): three terms in seconds —
   memory     = HLO_bytes / HBM_bw
   collective = collective_wire_bytes / link_bw
 plus the dominant term, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and a
-bottleneck note.  TPU v5e: 197 TF bf16, 819 GB/s HBM, 50 GB/s/link.
+bottleneck note.
+
+Peaks are a parameter, not import-time constants: the default is the
+datasheet TPU v5e (197 TF bf16, 819 GB/s HBM, 50 GB/s/link), but
+``--calib CALIB.json`` swaps in the execution-grounded peaks fitted by
+``python -m repro.cli calibrate``, and ``resolve_peaks`` also accepts
+an ``HW`` instance (the simulator's own constants).
 """
 from __future__ import annotations
 
+import argparse
+import dataclasses
 import json
+import sys
 from pathlib import Path
+from typing import Optional, Union
 
 from benchmarks.common import emit
-from repro.core.hardware import (TPU_V5E_FLOPS, TPU_V5E_HBM_BW,
-                                 TPU_V5E_ICI_BW)
+from repro.core.hardware import HW
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+@dataclasses.dataclass(frozen=True)
+class Peaks:
+    """The three roofline denominators plus where they came from."""
+    flops: float        # peak FLOP/s per chip
+    hbm_bw: float       # HBM bytes/s per chip
+    ici_bw: float       # interconnect bytes/s per link
+    source: str = "tpu_v5e"
+
+
+def resolve_peaks(source: Union[None, HW, str, Path] = None) -> Peaks:
+    """Build ``Peaks`` from (in order of preference):
+
+    * ``None`` — the TPU v5e datasheet constants (the historical
+      behaviour);
+    * an ``HW`` instance — the simulator's own per-die constants;
+    * a path — a ``CALIB.json`` artifact's fitted effective peaks
+      (``ici_bw`` stays at the v5e datasheet value: calibration runs
+      single-host, so no link measurement exists).
+    """
+    from repro.core.hardware import (TPU_V5E_FLOPS, TPU_V5E_HBM_BW,
+                                     TPU_V5E_ICI_BW)
+    if source is None:
+        return Peaks(TPU_V5E_FLOPS, TPU_V5E_HBM_BW, TPU_V5E_ICI_BW)
+    if isinstance(source, HW):
+        return Peaks(source.die_tflops * 1e12 * source.mfu_ceiling,
+                     source.hbm_bw_per_die, source.oi_link_bw,
+                     source="hw")
+    from repro.calib import load_calibration
+    calib = load_calibration(str(source))
+    eff = calib["effective"]
+    return Peaks(eff["die_tflops"] * 1e12, eff["hbm_bw_per_die"],
+                 TPU_V5E_ICI_BW, source=str(source))
 
 
 def _advice(dom, rec):
@@ -27,7 +70,8 @@ def _advice(dom, rec):
     return "rebalance sharding to cut collective bytes"
 
 
-def analyze(mesh="single"):
+def analyze(mesh="single", peaks: Optional[Peaks] = None):
+    peaks = peaks if peaks is not None else resolve_peaks()
     rows, recs = [], []
     for f in sorted(ART.glob(f"*__{mesh}.json")):
         rec = json.loads(f.read_text())
@@ -35,16 +79,16 @@ def analyze(mesh="single"):
             rows.append([rec["arch"], rec["shape"], "SKIP",
                          rec.get("reason", ""), "", "", "", "", ""])
             continue
-        comp = rec["hlo_flops_per_device"] / TPU_V5E_FLOPS
-        mem = rec["hlo_bytes_per_device"] / TPU_V5E_HBM_BW
-        coll = rec["coll_wire_bytes_per_device"] / TPU_V5E_ICI_BW
+        comp = rec["hlo_flops_per_device"] / peaks.flops
+        mem = rec["hlo_bytes_per_device"] / peaks.hbm_bw
+        coll = rec["coll_wire_bytes_per_device"] / peaks.ici_bw
         terms = {"compute": comp, "memory": mem, "collective": coll}
         dom = max(terms, key=terms.get)
         model_per_dev = rec["model_flops_step"] / rec["n_chips"]
         useful = model_per_dev / max(rec["hlo_flops_per_device"], 1.0)
         # roofline fraction: model-useful compute time over the
         # achievable step floor (max of the three terms)
-        frac = (model_per_dev / TPU_V5E_FLOPS) / max(terms.values())
+        frac = (model_per_dev / peaks.flops) / max(terms.values())
         recs.append(dict(rec, terms=terms, dom=dom, useful=useful,
                          frac=frac))
         rows.append([rec["arch"], rec["shape"], f"{comp:.4f}",
@@ -56,9 +100,13 @@ def analyze(mesh="single"):
     return recs
 
 
-def run():
-    recs = analyze("single")
-    analyze("multi")
+def run(calib: Optional[str] = None):
+    peaks = resolve_peaks(calib)
+    print(f"peaks [{peaks.source}]: {peaks.flops / 1e12:.1f} TF, "
+          f"{peaks.hbm_bw / 1e9:.0f} GB/s HBM, "
+          f"{peaks.ici_bw / 1e9:.0f} GB/s/link")
+    recs = analyze("single", peaks=peaks)
+    analyze("multi", peaks=peaks)
     live = [r for r in recs if "terms" in r]
     if live:
         worst = min(live, key=lambda r: r["frac"])
@@ -70,5 +118,15 @@ def run():
     return recs
 
 
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--calib", default=None, metavar="CALIB_JSON",
+                    help="use fitted peaks from this calibration "
+                         "artifact instead of TPU v5e datasheet values")
+    args = ap.parse_args(argv)
+    run(calib=args.calib)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    sys.exit(main())

@@ -59,6 +59,12 @@ class Scenario:
     fabrics: Tuple[str, ...] = ("oi",)
     reuse: bool = True
     hw: Dict[str, Any] = field(default_factory=dict)        # HW overrides
+    # path to a CALIB.json artifact (repro.calib): ``build_hw`` starts
+    # from ``HW.calibrated(...)`` — the measured effective constants —
+    # instead of DEFAULT_HW ("" = off).  Explicit ``hw`` overrides
+    # still win on top; ``Study.run`` stamps the constants into
+    # ``StudyResult.provenance["calibration"]``.
+    calibration: str = ""
 
     # -- search ----------------------------------------------------------
     objectives: Tuple[str, ...] = ("throughput", "cost", "power")
@@ -122,6 +128,9 @@ class Scenario:
         if bad:
             raise ValueError(f"unknown hw overrides {bad}; "
                              f"allowed: {sorted(_HW_FIELDS)}")
+        if not isinstance(self.calibration, str):
+            raise ValueError(f"calibration must be a CALIB.json path "
+                             f"string, got {self.calibration!r}")
         set_("driver_kw", dict(self.driver_kw))
 
         if self.backend not in ("numpy", "jax", "auto"):
@@ -154,8 +163,11 @@ class Scenario:
                         global_batch=self.global_batch, **self.workload)
 
     def build_hw(self) -> HW:
-        return dataclasses.replace(DEFAULT_HW, **self.hw) if self.hw \
-            else DEFAULT_HW
+        base = DEFAULT_HW
+        if self.calibration:
+            from repro.calib import load_calibration
+            base = HW.calibrated(load_calibration(self.calibration))
+        return dataclasses.replace(base, **self.hw) if self.hw else base
 
     def design_space(self, alloc_mode: str = "chiplight") -> DesignSpace:
         return DesignSpace.from_compute(

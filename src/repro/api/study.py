@@ -55,6 +55,13 @@ class Study:
             result.provenance["metrics"] = _metrics_block(
                 result, ms, time.perf_counter() - t0,
                 jax_stats()["traces"] - traces0)
+            if sc.calibration:
+                # the run executed on measured constants — stamp them
+                # (plus where they were measured) next to the metrics
+                # block so the artifact is self-describing
+                from repro.calib import calibration_block
+                result.provenance["calibration"] = \
+                    calibration_block(sc.calibration)
         return result
 
 

@@ -27,6 +27,13 @@ timeline recording and writes the SIMULATED step as a Perfetto trace
 instant markers).  ``bench check`` re-measures the quick benchmark
 workloads and gates them on the committed BENCH_*.json floors.
 
+``calibrate`` is the execution-grounded loop (``repro.obs.profile`` +
+``repro.calib``): profile the repo's real kernels, fit the analytic
+cost constants (effective peak FLOP/s, HBM bytes/s, and the
+``M/(M+half)`` efficiency curves), and write the schema-versioned
+``CALIB.json`` — or, with ``--check``, re-measure and gate drift
+against the committed artifact.
+
 ``lint`` runs chiplint (``repro.analysis``), the AST-based invariant
 analyzer: parity drift between the scalar/batched/event-DAG engines,
 jax trace hygiene, physical-unit mismatches, and determinism/metric-
@@ -36,8 +43,9 @@ schema violations — against the committed baseline
 Exit codes: 0 ok; 2 bad arguments; 3 when a study found NO feasible
 design point (every sweep cell infeasible); ``validate``: 1 when any
 asserted point exceeds the fidelity tolerance; ``bench check``: 1 when
-any floor is violated; ``lint``: 1 on findings outside the baseline
-(or stale baseline entries).
+any floor is violated; ``calibrate --check``: 1 when any gated
+constant drifted beyond tolerance; ``lint``: 1 on findings outside
+the baseline (or stale baseline entries).
 """
 from __future__ import annotations
 
@@ -448,6 +456,100 @@ def main_bench(argv: List[str]) -> int:
 
 
 # ---------------------------------------------------------------------------
+# `calibrate` subcommand — measured kernel constants + the drift gate
+# ---------------------------------------------------------------------------
+def build_calibrate_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.cli calibrate",
+        description="Execution-grounded calibration (repro.obs.profile "
+                    "+ repro.calib): run the repo's real kernels over "
+                    "an (M, N) grid, fit the analytic cost constants "
+                    "(effective peak FLOP/s, HBM bytes/s, and the "
+                    "M/(M+half) efficiency curves), and write the "
+                    "schema-versioned CALIB.json artifact.  --check "
+                    "re-measures and gates per-kernel drift against "
+                    "the committed artifact instead (exit 1 on "
+                    "breach).")
+    ap.add_argument("--out", default="CALIB.json",
+                    help="calibration artifact path (also the "
+                         "committed artifact --check compares against)")
+    ap.add_argument("--kernels", type=_csv(str, "--kernels"),
+                    default=None,
+                    help="comma list of kernels (default: all; see "
+                         "repro.obs.profile.PROFILE_KERNELS)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI grid: drop the most expensive point per "
+                         "kernel, 2 reps")
+    ap.add_argument("--check", action="store_true",
+                    help="drift mode: re-measure and compare against "
+                         "--out instead of rewriting it")
+    ap.add_argument("--fidelity", default="FIDELITY.json",
+                    help="fidelity report to stamp with the execution-"
+                         "grounded block on write ('' disables; "
+                         "missing file = skipped)")
+    ap.add_argument("--trace", default=None, metavar="TRACE_JSON",
+                    help="write the profile host trace (spans + "
+                         "achieved-rate counter tracks, Perfetto-"
+                         "loadable)")
+    return ap
+
+
+def main_calibrate(argv: List[str]) -> int:
+    from repro.calib import (check_drift, fit_calibration,
+                             load_calibration, stamp_fidelity,
+                             write_calibration)
+    from repro.obs.profile import profile_kernels
+    ap = build_calibrate_parser()
+    args = ap.parse_args(argv)
+    try:
+        committed = load_calibration(args.out) if args.check else None
+        with _maybe_tracing(args.trace):
+            measurements = profile_kernels(args.kernels,
+                                           quick=args.quick)
+        calib = fit_calibration(measurements, quick=args.quick)
+    except (ValueError, KeyError, OSError) as e:
+        ap.exit(EXIT_USAGE, f"{ap.prog}: error: {e}\n")
+    eff = calib["effective"]
+    print(f"\n=== calibrate: {len(measurements)} measurements, "
+          f"{len(calib['kernels'])} kernels "
+          f"({calib['provenance']['backend']}/"
+          f"{calib['provenance']['device']}) ===")
+    for name, f in sorted(calib["kernels"].items()):
+        unit = "FLOP/s" if f["kind"] == "compute" else "B/s"
+        tail = (f"  n_half={f['n_half']:7.1f}" if "n_half" in f else "")
+        print(f"  {name:22s} {f['kind']:7s} peak {f['peak']:.3e} {unit}"
+              f"  m_half={f['m_half']:7.1f}  "
+              f"resid {f['rel_rmse'] * 100:4.1f}%{tail}")
+    if "die_tflops" in eff:
+        print(f"  effective: die_tflops={eff['die_tflops']:.4f} "
+              f"gemm_m_half={eff.get('gemm_m_half', 0.0):.1f} "
+              f"gemm_n_half={eff.get('gemm_n_half', 0.0):.1f}")
+    if "hbm_bw_per_die" in eff:
+        print(f"  effective: hbm_bw_per_die="
+              f"{eff['hbm_bw_per_die']:.3e} B/s")
+
+    if args.check:
+        print(f"\ndrift vs {args.out}:")
+        rows = check_drift(calib, committed)
+        n_fail = sum(not r["ok"] for r in rows)
+        n_gated = sum(r["asserted"] for r in rows)
+        if n_fail:
+            print(f"FAIL: {n_fail}/{n_gated} gated constants drifted "
+                  f"beyond tolerance")
+            return 1
+        print(f"OK: all {n_gated} gated constants within tolerance")
+        return EXIT_OK
+
+    path = write_calibration(calib, args.out)
+    print(f"  wrote {path}")
+    if args.fidelity:
+        stamped = stamp_fidelity(calib, args.fidelity)
+        if stamped:
+            print(f"  stamped execution block -> {stamped}")
+    return EXIT_OK
+
+
+# ---------------------------------------------------------------------------
 # `lint` subcommand — chiplint, the AST invariant analyzer
 # ---------------------------------------------------------------------------
 def build_lint_parser() -> argparse.ArgumentParser:
@@ -536,6 +638,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         return main_timeline(argv[1:])
     if argv and argv[0] == "bench":
         return main_bench(argv[1:])
+    if argv and argv[0] == "calibrate":
+        return main_calibrate(argv[1:])
     if argv and argv[0] == "lint":
         return main_lint(argv[1:])
     ap = build_parser()

@@ -11,7 +11,7 @@ The TPU-v5e constants at the bottom are for the JAX dry-run roofline only
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, fields, replace
 
 
 @dataclass(frozen=True)
@@ -92,6 +92,25 @@ class HW:
     # overlap is credited (bucketed DP AR in bwd, ring-attention CP).
     dp_overlap_frac: float = 0.5       # DP AR overlappable with bwd compute
     cp_overlap_frac: float = 0.5       # ring-attention overlap
+
+    @classmethod
+    def calibrated(cls, calib: dict, base: "HW" = None) -> "HW":
+        """An ``HW`` running on the MEASURED constants of a CALIB.json
+        artifact (``repro.calib``): the artifact's ``effective`` block
+        overrides the matching fields of ``base`` (default constants
+        when omitted).  The fitted peaks are ACHIEVED asymptotes, so
+        the block ships ``mfu_ceiling=1.0`` and turns the fitted
+        ``M/(M+half)`` shape curve on (``model_gemm_eff=True``)."""
+        eff = calib.get("effective")
+        if not isinstance(eff, dict) or not eff:
+            raise ValueError("calibration artifact has no 'effective' "
+                             "block — re-run `cli calibrate`")
+        known = {f.name for f in fields(cls)}
+        bad = sorted(set(eff) - known)
+        if bad:
+            raise ValueError(f"calibration 'effective' block has "
+                             f"unknown HW fields {bad}")
+        return replace(base if base is not None else cls(), **eff)
 
     def die_cost(self, area_mm2: float) -> float:
         """Yield-adjusted cost of one logic die of the given area."""

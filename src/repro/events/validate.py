@@ -228,6 +228,18 @@ def validate_scenario(scenario, top: int = 4,
             "rows": rows, "elapsed_s": time.perf_counter() - t0}
 
 
+def execution_anchor(calib_path: str = "CALIB.json"):
+    """The fidelity report's execution-grounded block: a summary of the
+    committed calibration artifact (``repro.calib``), or ``None`` when
+    no usable artifact exists at ``calib_path``."""
+    from repro.calib import execution_block, load_calibration
+    try:
+        calib = load_calibration(calib_path)
+    except (OSError, ValueError):
+        return None
+    return execution_block(calib, source=calib_path)
+
+
 def validate_zoo(paths: Sequence = (), top: int = 4,
                  schedules: Sequence[str] = SCHEDULES,
                  tolerance: float = DEFAULT_TOLERANCE,
@@ -271,6 +283,12 @@ def validate_zoo(paths: Sequence = (), top: int = 4,
         },
         "scenarios": blocks,
     }
+    # Execution-grounded anchor: if a committed CALIB.json exists, the
+    # report records what the analytic constants were fitted against
+    # (non-asserted — drift gating is `cli calibrate --check`'s job).
+    anchor = execution_anchor()
+    if anchor is not None:
+        report["execution"] = anchor
     if out:
         p = Path(out)
         p.parent.mkdir(parents=True, exist_ok=True)

@@ -10,17 +10,22 @@ Three zero-dependency layers (see DESIGN.md §observability):
   training step, plus structural validation and per-track idle
   accounting;
 * ``bench``   — the unified BENCH_*.json floor gate behind
-  ``python -m repro.cli bench check``.
+  ``python -m repro.cli bench check`` (plus ``time_fn``, the shared
+  kernel wall-clock timer);
+* ``profile`` — the kernel profiling harness feeding ``repro.calib``
+  and ``python -m repro.cli calibrate`` (jax imported lazily).
 """
 from repro.obs.metrics import METRICS_SCHEMA, Metrics, gauge, inc, scope
 from repro.obs.trace import Tracer, current_tracer, span, tracing
 from repro.obs.export import (chrome_trace_from_event_result,
                               chrome_trace_from_tracer, track_idle,
                               validate_chrome_trace, write_chrome_trace)
+from repro.obs.profile import PROFILE_KERNELS, profile_kernels
 
 __all__ = [
     "METRICS_SCHEMA", "Metrics", "gauge", "inc", "scope",
     "Tracer", "current_tracer", "span", "tracing",
     "chrome_trace_from_event_result", "chrome_trace_from_tracer",
     "track_idle", "validate_chrome_trace", "write_chrome_trace",
+    "PROFILE_KERNELS", "profile_kernels",
 ]

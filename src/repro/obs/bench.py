@@ -26,6 +26,12 @@ DEFAULT_FLOORS: Dict[str, Dict[str, float]] = {
     "study": {"points_per_s_study": 30_000.0},
     "outer": {"points_per_s_requested": 50_000.0,
               "speedup_requested_pts_per_s": 3.0},
+    # jitted xla-path kernel calls/s on CPU (benchmarks/kernels_micro
+    # --quick); floors catch an interpret-mode fallback or a per-row
+    # python loop (100-1000x), not host noise
+    "kernels": {"flash_attn_fwd_calls_per_s": 2.0,
+                "rmsnorm_calls_per_s": 20.0,
+                "ssd_calls_per_s": 1.0},
     # the two batch floors gate the SAME K=64 top-records batch through
     # each wavefront backend of repro.events.batch.replay_batch (warm
     # laptop-class measurements: ~70k numpy, ~400k jax records/s);
@@ -39,7 +45,8 @@ DEFAULT_FLOORS: Dict[str, Dict[str, float]] = {
 }
 
 BENCH_FILES = {"study": "BENCH_study.json", "outer": "BENCH_outer.json",
-               "events": "BENCH_events.json"}
+               "events": "BENCH_events.json",
+               "kernels": "BENCH_kernels.json"}
 
 BATCH_K = 64          # batch-replay width of the events check
 
@@ -78,6 +85,29 @@ def enforce(which: str, measured: Dict[str, float],
         rows.append({"bench": which, "metric": name, "value": value,
                      "floor": floor, "ok": ok})
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Shared wall-clock timing (kernel benchmarks + the profiling harness)
+# ---------------------------------------------------------------------------
+def time_fn(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Best-of-``reps`` wall seconds per ``fn(*args)`` call after
+    ``warmup`` untimed calls (jit compile + first dispatch).
+
+    ``jax.block_until_ready`` accepts any pytree, so tuple-returning
+    kernels need no special casing (the old
+    ``benchmarks/kernels_micro._time`` re-ran the function once just to
+    probe tuple-ness and branched on it).
+    """
+    import jax
+    for _ in range(max(int(warmup), 0)):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(max(int(reps), 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 # ---------------------------------------------------------------------------
@@ -292,8 +322,43 @@ def measure_events_quick(repeats: int = 3) -> Dict[str, float]:
     return out
 
 
+def measure_kernels_quick(reps: int = 3) -> Dict[str, float]:
+    """Jitted xla-path kernel calls/s — the shapes
+    ``benchmarks/kernels_micro.py --quick`` gates."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(0)
+    s = 256
+    q = jax.random.normal(key, (1, 8, s, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 2, s, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 2, s, 64), jnp.float32)
+    f_fa = jax.jit(lambda q_, k_, v_: ops.flash_attention(
+        q_, k_, v_, block=128, backend="xla"))
+    t_fa = time_fn(f_fa, q, k, v, reps=reps)
+
+    x = jax.random.normal(key, (4096, 1024))
+    w = jnp.ones((1024,))
+    f_rn = jax.jit(lambda x_: ops.rmsnorm(x_, w))
+    t_rn = time_fn(f_rn, x, reps=reps)
+
+    bb, ss, h, p, g, n = 1, 512, 8, 64, 1, 64
+    xs = jax.random.normal(key, (bb, ss, h, p))
+    dt = jax.nn.softplus(jax.random.normal(key, (bb, ss, h)))
+    a = -jnp.exp(jax.random.normal(key, (h,)) * 0.5)
+    bm = jax.random.normal(key, (bb, ss, g, n)) * 0.3
+    cm = jax.random.normal(key, (bb, ss, g, n)) * 0.3
+    f_ssd = jax.jit(lambda *t: ops.ssd(*t, chunk=128, backend="xla"))
+    t_ssd = time_fn(f_ssd, xs, dt, a, bm, cm, reps=reps)
+    return {"flash_attn_fwd_calls_per_s": 1.0 / t_fa,
+            "rmsnorm_calls_per_s": 1.0 / t_rn,
+            "ssd_calls_per_s": 1.0 / t_ssd}
+
+
 _MEASURE = {"study": measure_study_quick, "outer": measure_outer_quick,
-            "events": measure_events_quick}
+            "events": measure_events_quick,
+            "kernels": measure_kernels_quick}
 
 
 def run_checks(which: Sequence[str] = ("study", "outer", "events"),

@@ -54,10 +54,14 @@ KNOWN_COUNTERS = frozenset({
     "outer.event_replayed",
     "outer.variant_cache.hits",
     "outer.variants_evaluated",
+    "profile.kernels",
+    "profile.measurements",
 })
 KNOWN_GAUGES = frozenset({
     "batch_replay.jax_bucket",
     "batched_sim.jax_bucket",
+    "profile.achieved_gbs",
+    "profile.achieved_tflops",
 })
 
 
@@ -115,7 +119,14 @@ def inc(name: str, n: float = 1) -> None:
 
 
 def gauge(name: str, value: float) -> None:
+    """Set gauge ``name`` in the active registry (and, like ``inc``,
+    sample it on the installed tracer so Perfetto renders the gauge as
+    a counter track over time — e.g. the profiling harness's achieved
+    FLOP/s)."""
     active().gauge(name, value)
+    tr = _trace.current_tracer()
+    if tr is not None:
+        tr.sample(name, float(value))
 
 
 @contextmanager

@@ -1,0 +1,233 @@
+"""repro.calib + repro.obs.profile: fitting, the CALIB.json artifact,
+HW/Scenario/Study integration, the drift gate, and the CLI."""
+import copy
+import json
+import math
+
+import pytest
+
+from repro import cli
+from repro.calib import (check_drift, execution_block, fit_calibration,
+                         fit_saturation, load_calibration,
+                         stamp_fidelity, write_calibration)
+from repro.core.hardware import DEFAULT_HW, HW
+
+
+# ---------------------------------------------------------------------------
+# fit_saturation
+# ---------------------------------------------------------------------------
+def test_fit_saturation_recovers_synthetic_curve():
+    peak, half = 3.2e12, 192.0
+    xs = [32, 64, 128, 256, 512, 1024, 4096]
+    ys = [peak * x / (x + half) for x in xs]
+    p, h, resid = fit_saturation(xs, ys)
+    assert abs(p / peak - 1) < 0.02
+    assert abs(math.log2(h / half)) < 0.2
+    assert resid < 0.01
+
+
+def test_fit_saturation_rejects_degenerate_input():
+    with pytest.raises(ValueError):
+        fit_saturation([128], [1.0])
+    with pytest.raises(ValueError):
+        fit_saturation([1, 2], [1.0, -1.0])
+
+
+# ---------------------------------------------------------------------------
+# profile -> fit -> artifact (one real measurement pass, module-scoped)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def quick_calib():
+    from repro.obs.profile import profile_kernels
+    ms = profile_kernels(["rmsnorm", "moe_gmm"], quick=True, reps=1)
+    return fit_calibration(ms, quick=True), ms
+
+
+def test_profile_measurement_rows(quick_calib):
+    _, ms = quick_calib
+    kinds = {r["kernel"]: r["kind"] for r in ms}
+    assert kinds == {"rmsnorm": "memory", "moe_gmm": "compute"}
+    for r in ms:
+        assert r["time_s"] > 0 and r["flops_per_s"] > 0
+        assert set(r) >= {"kernel", "kind", "axis", "x", "shape",
+                          "flops", "bytes", "time_s", "reps"}
+    # moe_gmm sweeps both axes (m for gemm_m_half, n for gemm_n_half)
+    assert {r["axis"] for r in ms if r["kernel"] == "moe_gmm"} == {"m", "n"}
+
+
+def test_profile_rejects_unknown_kernel():
+    from repro.obs.profile import profile_kernels
+    with pytest.raises(KeyError):
+        profile_kernels(["not_a_kernel"], quick=True)
+
+
+def test_calib_artifact_schema(quick_calib, tmp_path):
+    calib, _ = quick_calib
+    assert calib["schema"] == 1
+    assert calib["provenance"]["backend"]
+    assert calib["provenance"]["quick"] is True
+    fits = calib["kernels"]
+    assert fits["moe_gmm"]["kind"] == "compute"
+    assert "n_half" in fits["moe_gmm"]
+    assert fits["rmsnorm"]["kind"] == "memory"
+    eff = calib["effective"]
+    assert eff["mfu_ceiling"] == 1.0 and eff["model_gemm_eff"] is True
+    assert eff["die_tflops"] > 0 and eff["hbm_bw_per_die"] > 0
+
+    p = tmp_path / "CALIB.json"
+    write_calibration(calib, p)
+    loaded = load_calibration(str(p))
+    assert loaded["effective"] == json.loads(json.dumps(eff))
+
+
+def test_load_calibration_errors(tmp_path):
+    with pytest.raises(ValueError, match="calibrate"):
+        load_calibration(str(tmp_path / "missing.json"))
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"schema": 99}')
+    with pytest.raises(ValueError, match="schema"):
+        load_calibration(str(bad))
+
+
+# ---------------------------------------------------------------------------
+# HW / Scenario / Study integration
+# ---------------------------------------------------------------------------
+def test_hw_calibrated(quick_calib):
+    calib, _ = quick_calib
+    hw = HW.calibrated(calib)
+    assert hw.die_tflops == calib["effective"]["die_tflops"]
+    assert hw.mfu_ceiling == 1.0 and hw.model_gemm_eff is True
+    # untouched fields come from the base
+    assert hw.oi_link_bw == DEFAULT_HW.oi_link_bw
+    with pytest.raises(ValueError, match="unknown HW fields"):
+        HW.calibrated({"effective": {"die_tflops": 1.0, "nope": 2}})
+    with pytest.raises(ValueError, match="effective"):
+        HW.calibrated({"kernels": {}})
+
+
+def test_scenario_calibration_and_study_stamp(quick_calib, tmp_path):
+    from repro.api import Scenario, Study
+    calib, _ = quick_calib
+    p = tmp_path / "CALIB.json"
+    write_calibration(calib, p)
+
+    # the cluster is sized as total_tflops / die_tflops, so a study on
+    # measured (cpu-scale) constants needs a proportionally scaled C —
+    # ~64 calibrated dies here
+    C = calib["effective"]["die_tflops"] * 64
+    sc = Scenario(model="tinyllama_1_1b", total_tflops=C, seq_len=4096,
+                  global_batch=256, fabrics=("oi",),
+                  calibration=str(p))
+    sc2 = Scenario.from_dict(sc.to_dict())
+    assert sc2.calibration == str(p)
+    assert sc.build_hw().die_tflops == calib["effective"]["die_tflops"]
+    with pytest.raises(ValueError):
+        Scenario(model="tinyllama_1_1b", total_tflops=1e6,
+                 calibration=123)
+
+    res = Study(sc).run()
+    assert res.records            # feasible designs at the scaled C
+    block = res.provenance["calibration"]
+    assert block["schema"] == 1
+    assert block["effective"]["die_tflops"] == \
+        calib["effective"]["die_tflops"]
+    assert block["measured_on"]["backend"] == \
+        calib["provenance"]["backend"]
+    # and it round-trips through the result artifact
+    rt = json.loads(json.dumps(res.to_dict()))
+    assert rt["provenance"]["calibration"] == block
+
+
+def test_scenario_without_calibration_untouched():
+    from repro.api import Scenario
+    sc = Scenario(model="tinyllama_1_1b", total_tflops=1e6)
+    assert sc.calibration == ""
+    assert sc.build_hw() == DEFAULT_HW
+
+
+# ---------------------------------------------------------------------------
+# Drift gate
+# ---------------------------------------------------------------------------
+def test_check_drift_self_is_clean(quick_calib):
+    calib, _ = quick_calib
+    rows = check_drift(calib, calib)
+    assert rows and all(r["ok"] for r in rows)
+
+
+def test_check_drift_catches_perturbed_peak(quick_calib):
+    calib, _ = quick_calib
+    bad = copy.deepcopy(calib)
+    bad["kernels"]["moe_gmm"]["peak"] *= 1e3   # way past the 8x gate
+    rows = check_drift(calib, bad)
+    fails = {r["metric"] for r in rows if not r["ok"]}
+    assert "moe_gmm.peak" in fails
+    # half constants never gate, even when absurd
+    bad2 = copy.deepcopy(calib)
+    bad2["kernels"]["moe_gmm"]["m_half"] *= 1e3
+    assert all(r["ok"] for r in check_drift(calib, bad2))
+
+
+def test_check_drift_respects_artifact_tolerances(quick_calib):
+    calib, _ = quick_calib
+    bad = copy.deepcopy(calib)
+    bad["kernels"]["moe_gmm"]["peak"] *= 3.0   # inside 8x, outside 2x
+    assert all(r["ok"] for r in check_drift(calib, bad)
+               if r["metric"] == "moe_gmm.peak")
+    bad["check_tolerances"] = {"log2_peak": 1.0}
+    rows = check_drift(calib, bad)
+    assert any(r["metric"] == "moe_gmm.peak" and not r["ok"]
+               for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# Fidelity stamp + CLI
+# ---------------------------------------------------------------------------
+def test_execution_block_and_fidelity_stamp(quick_calib, tmp_path):
+    calib, _ = quick_calib
+    blk = execution_block(calib)
+    assert blk["calib_schema"] == 1
+    assert set(blk["kernels"]) == {"moe_gmm", "rmsnorm"}
+
+    fid = tmp_path / "FIDELITY.json"
+    assert stamp_fidelity(calib, tmp_path / "absent.json") is None
+    fid.write_text(json.dumps({"schema": 1, "scenarios": []}))
+    stamp_fidelity(calib, fid)
+    report = json.loads(fid.read_text())
+    assert report["execution"]["effective"] == \
+        json.loads(json.dumps(calib["effective"]))
+    assert report["scenarios"] == []   # rest of the report intact
+
+
+def test_cli_calibrate_roundtrip_and_check(tmp_path, capsys):
+    out = tmp_path / "CALIB.json"
+    rc = cli.main(["calibrate", "--quick", "--kernels", "rmsnorm,moe_gmm",
+                   "--out", str(out), "--fidelity", ""])
+    assert rc == 0 and out.exists()
+    assert capsys.readouterr().out.count("peak") >= 2
+
+    # check vs what we just wrote: same host, must hold
+    rc = cli.main(["calibrate", "--quick", "--kernels",
+                   "rmsnorm,moe_gmm", "--out", str(out), "--check"])
+    assert rc == 0
+    assert "OK: all" in capsys.readouterr().out
+
+    # perturb the committed artifact beyond tolerance -> exit 1
+    calib = json.loads(out.read_text())
+    calib["kernels"]["moe_gmm"]["peak"] *= 1e3
+    calib["effective"]["die_tflops"] *= 1e3
+    write_calibration(calib, out)
+    rc = cli.main(["calibrate", "--quick", "--kernels",
+                   "rmsnorm,moe_gmm", "--out", str(out), "--check"])
+    assert rc == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_cli_calibrate_usage_errors(tmp_path):
+    with pytest.raises(SystemExit) as ei:
+        cli.main(["calibrate", "--quick", "--kernels", "bogus",
+                  "--out", str(tmp_path / "c.json")])
+    assert ei.value.code == cli.EXIT_USAGE
+    with pytest.raises(SystemExit) as ei:
+        cli.main(["calibrate", "--check",
+                  "--out", str(tmp_path / "missing.json")])
+    assert ei.value.code == cli.EXIT_USAGE
